@@ -1,0 +1,231 @@
+"""Benchmark harness: one function per paper table/figure + framework perf.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time per
+inner evaluation where meaningful; derived = headline metric).
+
+  table1        dataset structure vs paper Table I
+  table2        MAPE local/global x 5 jobs x {ernest,gbm,bom,ogb,c3o} (§VI-C.a)
+  fig5          MAPE vs training-set size (§VI-C.b)
+  configurator  deadline satisfaction + cost vs overprovisioning (§IV)
+  autoconfig    C3O-for-TPU mesh selection quality (beyond-paper)
+  kernels       Pallas kernel wall times (interpret) vs jitted jnp oracles
+  roofline      per-cell roofline table from experiments/dryrun_*.json
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--splits N] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_table1(args):
+    from repro.workloads import spark_emul as W
+    t0 = time.time()
+    data = W.generate_all()
+    total = sum(len(d) for d in data.values())
+    per = ";".join(f"{j}:{len(d)}" for j, d in data.items())
+    _row("table1.dataset", (time.time() - t0) * 1e6 / max(total, 1),
+         f"total={total} (paper:930) {per}")
+
+
+def bench_table2(args):
+    from benchmarks.common import JOBS, PAPER_TABLE2, run_scenario
+    for job in JOBS:
+        for scenario in (("local", "global") if job != "sort"
+                         else ("global",)):
+            t0 = time.time()
+            r = run_scenario(job, scenario, n_splits=args.splits)
+            dt = (time.time() - t0) * 1e6 / args.splits
+            for model in ("ernest", "gbm", "bom", "ogb", "c3o"):
+                paper = PAPER_TABLE2[job][model][scenario != "local"]
+                _row(f"table2.{job}.{scenario}.{model}", dt,
+                     f"mape={r[model]:.4f} paper={paper:.4f}")
+
+
+def bench_fig5(args):
+    from benchmarks.common import MODELS, TARGET_MACHINE
+    from repro.core.predictor import evaluate_split
+    from repro.workloads import spark_emul as W
+    sizes = [3, 6, 9, 12, 15, 18, 21, 24, 27, 30]
+    n_splits = max(args.splits // 4, 10)
+    for job in ("grep", "kmeans"):          # representative pair of panels
+        data = W.generate_job_data(job).filter_machine(TARGET_MACHINE)
+        rng = np.random.default_rng(1)
+        for n in sizes:
+            t0 = time.time()
+            errs = {}
+            for i in range(n_splits):
+                idx = rng.permutation(len(data))
+                tr, te = idx[:n], idx[n:]
+                r = evaluate_split(MODELS, data.X[tr], data.y[tr],
+                                   data.X[te], data.y[te],
+                                   max_cv_folds=min(n, 10), seed=i)
+                for k, v in r.items():
+                    if k != "c3o_selected":
+                        errs.setdefault(k, []).append(v)
+            dt = (time.time() - t0) * 1e6 / n_splits
+            summary = " ".join(
+                f"{m}={np.mean(np.minimum(errs[m], 10.0)):.3f}"
+                for m in ("ernest", "gbm", "bom", "ogb", "c3o"))
+            _row(f"fig5.{job}.n{n}", dt, summary)
+
+
+def bench_configurator(args):
+    from repro.core.configurator import Configurator
+    from repro.core.predictor import C3OPredictor
+    from repro.workloads import spark_emul as W
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    scaleouts = [2, 3, 4, 6, 8, 12, 16]
+    rng = np.random.default_rng(0)
+    for job, ctx_fn in (("grep", lambda: (rng.uniform(10, 20),
+                                          rng.choice([.002, .02, .08]))),
+                        ("sgd", lambda: (rng.uniform(10, 30),
+                                         rng.choice([5, 20, 40, 70, 100]),
+                                         rng.choice([50, 100])))):
+        d = W.generate_job_data(job).filter_machine("m5.xlarge")
+        pred = C3OPredictor(max_cv_folds=25).fit(d.X, d.y)
+        conf = Configurator(pred, "m5.xlarge", prices, scaleouts,
+                            confidence=0.95)
+        hits = total = 0
+        cost_c3o = cost_max = 0.0
+        t0 = time.time()
+        for _ in range(60):
+            ctx = np.asarray(ctx_fn(), dtype=float)
+            feasible_t = [W.true_runtime(job, "m5.xlarge", s, tuple(ctx))
+                          for s in scaleouts]
+            t_max = float(rng.uniform(1.15, 2.0) * min(feasible_t))
+            ch = conf.choose_scaleout(ctx, t_max=t_max)
+            truth = feasible_t[scaleouts.index(ch.scale_out)]
+            total += 1
+            hits += truth <= t_max
+            cost_c3o += prices["m5.xlarge"] * truth / 3600 * ch.scale_out
+            cost_max += prices["m5.xlarge"] * feasible_t[-1] / 3600 \
+                * scaleouts[-1]
+        dt = (time.time() - t0) * 1e6 / total
+        _row(f"configurator.{job}", dt,
+             f"deadline_hit={hits/total:.3f} (target>=0.95) "
+             f"cost_vs_overprovision={cost_c3o/cost_max:.3f}")
+
+
+def bench_autoconfig(args):
+    from repro.configs import SHAPES, get_config
+    from repro.launch.autoconfig import (SLICES, autoconfigure,
+                                         predicted_step_time)
+    for arch, shape in (("gemma3-1b", "train_4k"),
+                        ("deepseek-7b", "train_4k"),
+                        ("kimi-k2-1t-a32b", "train_4k")):
+        t0 = time.time()
+        choice, pred = autoconfigure(arch, shape,
+                                     chip_counts=(64, 128, 256, 512))
+        dt = (time.time() - t0) * 1e6
+        cfg = get_config(arch)
+        true_t = predicted_step_time(cfg, SHAPES[shape], SLICES["v5e"],
+                                     choice.scale_out)
+        err = abs(choice.predicted_runtime_s - true_t) / true_t
+        _row(f"autoconfig.{arch}", dt,
+             f"chips={choice.scale_out} model={pred.selected} "
+             f"step_pred={choice.predicted_runtime_s*1e3:.0f}ms "
+             f"pred_err={err:.3f}")
+
+
+def bench_kernels(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref as R
+    from repro.kernels.flash_attention import flash_attention
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 1, 512, 4, 2, 64
+
+    def timed(fn, *a, n=3, **kw):
+        fn(*a, **kw)           # compile/warm
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*a, **kw))
+        return (time.time() - t0) / n * 1e6
+
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    ref_t = timed(jax.jit(lambda q, k, v: R.attention_ref(q, k, v)), q, k, v)
+    _row("kernels.attention_ref_jit", ref_t, "oracle (XLA:CPU)")
+    pal_t = timed(lambda q, k, v: flash_attention(
+        q, k, v, q_block=128, kv_block=128, interpret=True), q, k, v, n=1)
+    _row("kernels.flash_attention_interpret", pal_t,
+         "correctness path (TPU kernel interpreted on CPU)")
+
+    r_ = jax.random.normal(ks[0], (B, 256, H, 32)) * 0.5
+    k_ = jax.random.normal(ks[1], (B, 256, H, 32)) * 0.5
+    v_ = jax.random.normal(ks[2], (B, 256, H, 32)) * 0.5
+    w_ = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, 256, H, 32)) * 0.5))
+    u_ = jnp.zeros((H, 32))
+    seq_t = timed(jax.jit(lambda *a: R.wkv6_ref(*a)[0]), r_, k_, v_, w_, u_)
+    chk_t = timed(jax.jit(lambda *a: R.wkv6_chunked_ref(*a)[0]),
+                  r_, k_, v_, w_, u_)
+    _row("kernels.wkv6_sequential_ref", seq_t, "token-recurrent oracle")
+    _row("kernels.wkv6_chunked_jnp", chk_t,
+         f"chunked form, speedup={seq_t/max(chk_t,1e-9):.1f}x over sequential")
+
+
+def bench_roofline(args):
+    recs = []
+    for p in sorted(glob.glob("experiments/dryrun_*.json")):
+        with open(p) as f:
+            recs.extend(json.load(f))
+    ok = [r for r in recs if r.get("status") == "ok"
+          and r["mesh"] == "16x16"]
+    if not ok:
+        _row("roofline", 0.0, "no dryrun records yet (run launch.dryrun)")
+        return
+    for r in ok:
+        rl = r["roofline"]
+        _row(f"roofline.{r['arch']}.{r['shape']}", r["compile_s"] * 1e6,
+             f"dom={rl['dominant']} bound_ms={rl['bound_s']*1e3:.1f} "
+             f"compute_ms={rl['compute_s']*1e3:.1f} "
+             f"mem_ms={rl['memory_s']*1e3:.1f} "
+             f"coll_ms={rl['collective_s']*1e3:.1f} "
+             f"useful={r['useful_flops_ratio']:.2f} "
+             f"fits={r['fits_hbm']}")
+
+
+BENCHES = {
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "fig5": bench_fig5,
+    "configurator": bench_configurator,
+    "autoconfig": bench_autoconfig,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--splits", type=int, default=60)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(args)
+        except Exception as e:       # report, keep the harness going
+            _row(f"{name}.ERROR", 0.0, f"{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's full workflow (Fig. 4) in one script.
+
+1. search the hub for a job  2. download shared runtime data
+3-4. provide inputs          5. get a cluster configuration
+6. contribute your run's metrics back.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Hub, JobRepo, RuntimeDataStore
+from repro.core.features import RuntimeData
+from repro.workloads import spark_emul as W
+
+
+def main():
+    # --- maintainers publish job repos with shared runtime data ----------
+    hub = Hub()
+    for job in ("sort", "grep", "kmeans"):
+        data = W.generate_job_data(job)
+        hub.publish(JobRepo(job, f"apache spark {job}", data.schema,
+                            RuntimeDataStore(data)))
+
+    # --- (1) the user searches for an algorithm --------------------------
+    repo = hub.search("grep")[0]
+    print(f"found job '{repo.job}' with {len(repo.store)} shared runs")
+
+    # --- (2-5) configure a cluster for the user's dataset + deadline -----
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    conf = repo.configurator("m5.xlarge", prices,
+                             scaleouts=[2, 3, 4, 6, 8, 12])
+    ctx = np.asarray([18.0, 0.02])      # 18 GB dataset, 2% keyword hits
+    print("\nruntime/cost menu (scale-out, est. seconds, $):")
+    for s, t_s, cost in conf.runtime_cost_pairs(ctx):
+        print(f"  {s:3d} nodes   {t_s:7.1f}s   ${cost:.4f}")
+    choice = conf.choose_scaleout(ctx, t_max=420.0)
+    print(f"\ndeadline 420s @95% confidence -> {choice.scale_out} nodes "
+          f"(bound {choice.runtime_bound_s:.0f}s, ${choice.cost_usd:.4f})")
+
+    # --- run it (emulated) and (6) contribute the measurement ------------
+    measured = W._measure("grep", "m5.xlarge", choice.scale_out,
+                          (18.0, 0.02), seed=123)
+    print(f"measured runtime: {measured:.1f}s "
+          f"({'deadline met' if measured <= 420 else 'MISSED'})")
+    new = RuntimeData(repo.schema, np.asarray(["m5.xlarge"]),
+                      np.asarray([[choice.scale_out, 18.0, 0.02]]),
+                      np.asarray([measured]))
+    report = repo.contribute(new)
+    print(f"contribution validation: accepted={report.accepted} "
+          f"({report.reason})")
+
+
+if __name__ == "__main__":
+    main()

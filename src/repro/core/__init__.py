@@ -1,0 +1,9 @@
+"""The paper's primary contribution: collaborative cluster-configuration
+optimization — runtime prediction models, dynamic model selection, the
+confidence-based configurator, and the shared-data machinery."""
+from repro.core.configurator import (ClusterChoice, Configurator,
+                                     choose_machine_type, confidence_margin)
+from repro.core.datastore import RuntimeDataStore, ValidationReport
+from repro.core.features import JobSchema, RuntimeData
+from repro.core.hub import Hub, JobRepo
+from repro.core.predictor import DEFAULT_MODELS, C3OPredictor, evaluate_split

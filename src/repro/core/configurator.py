@@ -1,0 +1,107 @@
+"""C3O cluster configurator (paper §IV).
+
+Machine type first (job-dependent, scale-out-independent — maintainer choice
+or cheapest-by-prediction fallback), then the scale-out:
+
+    s_hat = min{ s in S | t_s + mu + sqrt(2)*erfinv(2c-1)*sigma <= t_max }
+
+with (mu, sigma) the Gaussian error calibration from the predictor's
+cross-validation residuals.  Configurations with an expected hardware
+bottleneck (dataset missing cluster memory) are excluded unless nothing else
+satisfies the deadline (paper §IV-B).  When no deadline is given, the user is
+handed (scale-out, runtime, cost) pairs to choose from.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy.special import erfinv
+
+from repro.core.predictor import C3OPredictor
+
+
+def confidence_margin(c: float, mu: float, sigma: float) -> float:
+    """mu + sqrt(2) * erfinv(2c - 1) * sigma   (c=0.95 -> mu + 1.64485 sigma)."""
+    return mu + float(erfinv(2.0 * c - 1.0)) * np.sqrt(2.0) * sigma
+
+
+@dataclass(frozen=True)
+class ClusterChoice:
+    machine_type: str
+    scale_out: int
+    predicted_runtime_s: float
+    runtime_bound_s: float          # runtime + confidence margin
+    cost_usd: float                 # price * hours * nodes
+    bottleneck: bool                # expected memory bottleneck at this s
+
+
+@dataclass
+class Configurator:
+    predictor: C3OPredictor
+    machine_type: str
+    prices: Dict[str, float]                     # $ per node-hour
+    scaleouts: Sequence[int]
+    confidence: float = 0.95                     # paper default
+    # optional bottleneck model: (context_row, scale_out) -> True if the
+    # working set misses cluster memory at this scale-out
+    bottleneck_fn: Optional[Callable[[np.ndarray, int], bool]] = None
+
+    def _choices(self, context_row: np.ndarray) -> List[ClusterChoice]:
+        rows = np.stack([np.concatenate([[s], context_row])
+                         for s in self.scaleouts])
+        t, mu, sigma = self.predictor.predict_with_error(rows)
+        margin = confidence_margin(self.confidence, mu, sigma)
+        price = self.prices[self.machine_type]
+        out = []
+        for s, ts in zip(self.scaleouts, t):
+            bott = bool(self.bottleneck_fn(context_row, int(s))) \
+                if self.bottleneck_fn else False
+            out.append(ClusterChoice(
+                self.machine_type, int(s), float(ts), float(ts + margin),
+                float(price * (ts / 3600.0) * s), bott))
+        return out
+
+    def choose_scaleout(self, context_row: np.ndarray,
+                        t_max: Optional[float] = None) -> ClusterChoice:
+        """Smallest scale-out meeting the deadline with confidence c.
+
+        Bottlenecked scale-outs are skipped unless no clean option meets the
+        deadline; without a deadline, returns the cheapest clean choice."""
+        choices = self._choices(context_row)
+        clean = [c for c in choices if not c.bottleneck]
+        if t_max is None:
+            pool = clean or choices
+            return min(pool, key=lambda c: c.cost_usd)
+        ok_clean = [c for c in clean if c.runtime_bound_s <= t_max]
+        if ok_clean:
+            return min(ok_clean, key=lambda c: c.scale_out)
+        ok_any = [c for c in choices if c.runtime_bound_s <= t_max]
+        if ok_any:
+            return min(ok_any, key=lambda c: c.scale_out)
+        # nothing meets the deadline: return the fastest bound
+        return min(choices, key=lambda c: c.runtime_bound_s)
+
+    def runtime_cost_pairs(self, context_row: np.ndarray
+                           ) -> List[Tuple[int, float, float]]:
+        """(scale-out, predicted runtime, cost) menu (paper §IV-B end)."""
+        return [(c.scale_out, c.predicted_runtime_s, c.cost_usd)
+                for c in self._choices(context_row)]
+
+
+def choose_machine_type(predictors: Dict[str, C3OPredictor],
+                        prices: Dict[str, float],
+                        scaleouts: Sequence[int],
+                        context_row: np.ndarray) -> str:
+    """Fallback machine-type selection (paper §IV-A): cheapest expected cost
+    at each machine's best scale-out, using per-machine-type predictors."""
+    best_m, best_cost = None, np.inf
+    for m, pred in predictors.items():
+        rows = np.stack([np.concatenate([[s], context_row])
+                         for s in scaleouts])
+        t = pred.predict(rows)
+        cost = np.min(prices[m] * (t / 3600.0) * np.asarray(scaleouts))
+        if cost < best_cost:
+            best_m, best_cost = m, float(cost)
+    return best_m

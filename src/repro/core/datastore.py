@@ -1,0 +1,93 @@
+"""Collaborative runtime-data store with contribution validation (paper §III-C).
+
+Runtime data lives as TSV alongside the job (one store per job repo).
+``contribute`` implements §III-C.b: retrain the predictor with the candidate
+rows included and evaluate on a held-out test set of *previously existing*
+points; reject the contribution if the error increases significantly
+(corrupted or fabricated data would poison every collaborator's models).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.features import JobSchema, RuntimeData
+from repro.core.predictor import C3OPredictor
+
+
+@dataclass
+class ValidationReport:
+    accepted: bool
+    baseline_mape: float
+    candidate_mape: float
+    reason: str = ""
+
+
+class RuntimeDataStore:
+    """One shared store per (job, repository)."""
+
+    def __init__(self, data: RuntimeData, *, reject_ratio: float = 1.5,
+                 reject_slack: float = 0.02, seed: int = 0):
+        self.data = data
+        self.reject_ratio = reject_ratio
+        self.reject_slack = reject_slack
+        self.seed = seed
+
+    def __len__(self):
+        return len(self.data)
+
+    # ----------------------- persistence ---------------------------------
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.data.to_tsv())
+        os.replace(tmp, path)            # atomic, like checkpoints
+
+    @classmethod
+    def load(cls, path: str, schema: JobSchema, **kw) -> "RuntimeDataStore":
+        with open(path) as f:
+            return cls(RuntimeData.from_tsv(f.read(), schema), **kw)
+
+    # ----------------------- validation (§III-C.b) ------------------------
+    def _mape(self, train: RuntimeData, test: RuntimeData,
+              machine: str) -> float:
+        tr = train.filter_machine(machine)
+        te = test.filter_machine(machine)
+        if len(tr) < 5 or len(te) < 2:
+            return np.nan
+        pred = C3OPredictor(max_cv_folds=15, seed=self.seed).fit(tr.X, tr.y)
+        p = np.nan_to_num(pred.predict(te.X), nan=1e12, posinf=1e12)
+        return float(np.mean(np.abs(p - te.y) / np.maximum(te.y, 1e-9)))
+
+    def validate(self, contribution: RuntimeData,
+                 machine: Optional[str] = None) -> ValidationReport:
+        rng = np.random.default_rng(self.seed)
+        machine = machine or contribution.machine_type[0]
+        n = len(self.data)
+        idx = rng.permutation(n)
+        hold = idx[: max(2, n // 5)]
+        rest = idx[max(2, n // 5):]
+        test = self.data.subset(hold)
+        train = self.data.subset(rest)
+        base = self._mape(train, test, machine)
+        cand = self._mape(train.concat(contribution), test, machine)
+        if np.isnan(base) or np.isnan(cand):
+            return ValidationReport(True, base, cand,
+                                    "insufficient data for validation")
+        limit = base * self.reject_ratio + self.reject_slack
+        if cand > limit:
+            return ValidationReport(
+                False, base, cand,
+                f"error {cand:.3f} exceeds {limit:.3f} "
+                f"(baseline {base:.3f}) — contribution rejected")
+        return ValidationReport(True, base, cand, "accepted")
+
+    def contribute(self, contribution: RuntimeData) -> ValidationReport:
+        report = self.validate(contribution)
+        if report.accepted:
+            self.data = self.data.concat(contribution)
+        return report

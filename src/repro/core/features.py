@@ -1,0 +1,87 @@
+"""Feature schema and TSV codec for shared runtime data (paper §VI-A).
+
+Row layout follows the paper: machine type and scale-out first, job-specific
+context features after, runtime (seconds) last.  Column 0 of the encoded
+matrix is ALWAYS the scale-out (models such as the optimistic SSM depend on
+that convention); the machine type is a partition key, not a model feature
+(paper §VI-C: models only train on data from the target machine type).
+"""
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class JobSchema:
+    job: str
+    context_features: Tuple[str, ...]        # job-specific columns
+    base_features: Tuple[str, ...] = ("scale_out", "data_size_gb")
+
+    @property
+    def feature_names(self) -> Tuple[str, ...]:
+        return self.base_features + self.context_features
+
+    @property
+    def n_features(self) -> int:
+        return len(self.feature_names)
+
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return ("machine_type",) + self.feature_names + ("runtime_s",)
+
+
+@dataclass
+class RuntimeData:
+    """Rows of shared runtime data for one job."""
+    schema: JobSchema
+    machine_type: np.ndarray                 # [n] str
+    X: np.ndarray                            # [n, d] float64 (scale-out first)
+    y: np.ndarray                            # [n] float64 runtimes (seconds)
+
+    def __len__(self) -> int:
+        return len(self.y)
+
+    def filter_machine(self, machine: str) -> "RuntimeData":
+        m = self.machine_type == machine
+        return RuntimeData(self.schema, self.machine_type[m], self.X[m],
+                           self.y[m])
+
+    def subset(self, idx) -> "RuntimeData":
+        return RuntimeData(self.schema, self.machine_type[idx], self.X[idx],
+                           self.y[idx])
+
+    def concat(self, other: "RuntimeData") -> "RuntimeData":
+        assert self.schema.job == other.schema.job
+        return RuntimeData(
+            self.schema,
+            np.concatenate([self.machine_type, other.machine_type]),
+            np.concatenate([self.X, other.X]),
+            np.concatenate([self.y, other.y]))
+
+    # ---------------- TSV (the sharing format, paper §VI-A) ----------------
+    def to_tsv(self) -> str:
+        buf = io.StringIO()
+        buf.write("\t".join(self.schema.columns) + "\n")
+        for mt, x, t in zip(self.machine_type, self.X, self.y):
+            vals = [mt] + [f"{v:.6g}" for v in x] + [f"{t:.4f}"]
+            buf.write("\t".join(vals) + "\n")
+        return buf.getvalue()
+
+    @classmethod
+    def from_tsv(cls, text: str, schema: JobSchema) -> "RuntimeData":
+        lines = [l for l in text.strip().splitlines() if l]
+        header = lines[0].split("\t")
+        assert tuple(header) == schema.columns, \
+            f"schema mismatch: {header} vs {schema.columns}"
+        mts, xs, ys = [], [], []
+        for line in lines[1:]:
+            parts = line.split("\t")
+            mts.append(parts[0])
+            xs.append([float(v) for v in parts[1:-1]])
+            ys.append(float(parts[-1]))
+        return cls(schema, np.asarray(mts), np.asarray(xs, np.float64),
+                   np.asarray(ys, np.float64))

@@ -1,0 +1,73 @@
+"""C3O Hub emulation (paper §III-B): job repositories carrying code +
+shared runtime data + optional maintainer-supplied custom models.
+
+A JobRepo is what a user "downloads" in workflow step (2): it bundles the
+job's schema, the shared RuntimeDataStore, the candidate model list (default
+models plus any maintainer custom models registered under the common model
+API), and metadata for discovery on the hub.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.configurator import Configurator
+from repro.core.datastore import RuntimeDataStore, ValidationReport
+from repro.core.features import JobSchema, RuntimeData
+from repro.core.models.api import ModelSpec, register_model
+from repro.core.predictor import DEFAULT_MODELS, C3OPredictor
+
+
+@dataclass
+class JobRepo:
+    job: str
+    algorithm: str                       # hub metadata: underlying algorithm
+    schema: JobSchema
+    store: RuntimeDataStore
+    model_names: List[str] = field(default_factory=lambda: list(DEFAULT_MODELS))
+    maintainer_machine_type: Optional[str] = None   # paper §IV-A
+
+    def add_custom_model(self, spec: ModelSpec) -> None:
+        """Maintainers ship job-specific models behind the common API
+        (paper §III-C.c); they join the predictor's CV selection pool."""
+        register_model(spec)
+        if spec.name not in self.model_names:
+            self.model_names.append(spec.name)
+
+    def predictor_for(self, machine_type: str, seed: int = 0) -> C3OPredictor:
+        d = self.store.data.filter_machine(machine_type)
+        return C3OPredictor(model_names=tuple(self.model_names),
+                            seed=seed).fit(d.X, d.y)
+
+    def configurator(self, machine_type: str, prices: Dict[str, float],
+                     scaleouts: Sequence[int], **kw) -> Configurator:
+        return Configurator(self.predictor_for(machine_type), machine_type,
+                            prices, scaleouts, **kw)
+
+    def contribute(self, rows: RuntimeData) -> ValidationReport:
+        """Workflow step (6): captured runtime data flows back, validated."""
+        return self.store.contribute(rows)
+
+
+class Hub:
+    """The discovery index (paper Fig. 4, step 1)."""
+
+    def __init__(self):
+        self._repos: Dict[str, JobRepo] = {}
+
+    def publish(self, repo: JobRepo) -> None:
+        self._repos[repo.job] = repo
+
+    def search(self, algorithm: str) -> List[JobRepo]:
+        q = algorithm.lower()
+        return [r for r in self._repos.values()
+                if q in r.algorithm.lower() or q in r.job.lower()]
+
+    def get(self, job: str) -> JobRepo:
+        return self._repos[job]
+
+    def jobs(self) -> List[str]:
+        return sorted(self._repos)

@@ -1,0 +1,3 @@
+from repro.core.models import ernest, gbm, linear, optimistic  # noqa: F401
+from repro.core.models.api import (FittedModel, ModelSpec, get_model,
+                                   model_names, register_model)

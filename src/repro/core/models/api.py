@@ -1,0 +1,70 @@
+"""Common runtime-model API (paper §III-C.c: custom models share one API).
+
+Models are *functional* so the C3O predictor can ``vmap`` leave-one-out
+cross-validation over fold weight masks — every fold is a weighted refit on
+identical static shapes, which jit+vmap turns into one batched computation
+(the paper's sklearn implementation refits sequentially; this is our
+beyond-paper systems contribution for the model-selection hot loop).
+
+Each model is three *static* functions (stable identities, so jax.jit caches
+one executable per data shape, not per train/test split):
+
+  make_aux(X_np)            -> aux pytree of arrays (sort orders, group
+                               one-hots, ...), shape-stable for fixed n,d
+  fit(X, y, w, aux)         -> params pytree   (weighted; w=0 drops a sample)
+  predict(params, X, aux)   -> yhat
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    make_aux: Callable          # (X np [n,d]) -> aux pytree
+    fit: Callable               # (X, y, w, aux) -> params
+    predict: Callable           # (params, X, aux) -> yhat
+
+
+_REGISTRY: Dict[str, ModelSpec] = {}
+
+
+def register_model(spec: ModelSpec) -> ModelSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_model(name: str) -> ModelSpec:
+    from repro.core.models import ernest, gbm, linear, optimistic  # noqa: F401
+    return _REGISTRY[name]
+
+
+def model_names():
+    from repro.core.models import ernest, gbm, linear, optimistic  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+class FittedModel:
+    """Object wrapper for single-fit use (configurator, examples)."""
+
+    def __init__(self, spec: ModelSpec, X: np.ndarray, y: np.ndarray,
+                 w: Optional[np.ndarray] = None):
+        X = np.asarray(X, np.float64)
+        self.spec = spec
+        self.aux = spec.make_aux(X)
+        w = np.ones(len(y)) if w is None else w
+        self.params = jax.jit(spec.fit)(
+            jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
+            jnp.asarray(w, jnp.float32), self.aux)
+        self.name = spec.name
+
+    def predict(self, X) -> np.ndarray:
+        out = jax.jit(self.spec.predict)(
+            self.params, jnp.asarray(X, jnp.float32), self.aux)
+        return np.asarray(out, np.float64)

@@ -1,0 +1,64 @@
+"""Ernest baseline (Venkataraman et al., NSDI'16), paper §VI baseline.
+
+t(s, z) = θ0 + θ1 * z/s + θ2 * log(s) + θ3 * s,   θ >= 0  (NNLS)
+
+Only understands dataset size (column 1) and scale-out (column 0) — by
+construction it cannot model other context features, which is exactly the
+property the paper's Table II exposes on *global* training data.
+
+NNLS via projected gradient on the normal equations (Lipschitz step), which
+is jit/vmap-friendly (fixed iteration count), unlike Lawson–Hanson.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.models.api import ModelSpec, register_model
+
+
+class ErnestParams(NamedTuple):
+    theta: jnp.ndarray       # [4] >= 0
+    scale: jnp.ndarray       # [] target normalization
+
+
+def _basis(X):
+    s = jnp.maximum(X[:, 0], 1.0)
+    z = X[:, 1] if X.shape[1] > 1 else jnp.ones_like(s)
+    return jnp.stack([jnp.ones_like(s), z / s, jnp.log(s), s], axis=1)
+
+
+def ernest_fit(X, y, w, iters: int = 400) -> ErnestParams:
+    A = _basis(X)
+    w = w.astype(jnp.float32)
+    scale = jnp.maximum((w * jnp.abs(y)).sum() / jnp.maximum(w.sum(), 1e-12),
+                        1e-12)
+    yn = y / scale
+    # column-normalize for conditioning
+    cn = jnp.maximum(jnp.sqrt((w[:, None] * A ** 2).sum(0)), 1e-12)
+    An = A / cn
+    G = (An * w[:, None]).T @ An
+    b = (An * w[:, None]).T @ yn
+    L = jnp.linalg.norm(G, ord=2) + 1e-6         # Lipschitz constant
+
+    def step(th, _):
+        g = G @ th - b
+        return jnp.maximum(th - g / L, 0.0), None
+
+    th0 = jnp.maximum(b / jnp.maximum(jnp.diag(G), 1e-9), 0.0)
+    th, _ = jax.lax.scan(step, th0, None, length=iters)
+    return ErnestParams(th / cn, scale)
+
+
+def ernest_predict(p: ErnestParams, X) -> jnp.ndarray:
+    return (_basis(X) @ p.theta) * p.scale
+
+
+register_model(ModelSpec(
+    "ernest",
+    lambda X: {},
+    lambda X, y, w, aux: ernest_fit(X, y, w),
+    lambda p, X, aux: ernest_predict(p, X)))

@@ -1,0 +1,157 @@
+"""Gradient-boosted regression trees, fully in JAX (paper §V-A).
+
+Exact greedy splits over presorted features; weighted samples (w=0 excludes a
+sample, enabling vmapped leave-one-out refits).  Tree structure is a static
+level-order array layout, so fitting is jit-compatible: python loops only over
+static depth/feature counts, ``lax.scan`` over boosting rounds.
+
+Leaf values are computed from predict-consistent routing (samples routed with
+the same (feature, threshold, <=) rule used at inference), so duplicate
+feature values can never cause fit/predict disagreement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.models.api import ModelSpec, register_model
+
+NEG = -1e30
+
+
+class GBMParams(NamedTuple):
+    f0: jnp.ndarray           # [] base prediction
+    feat: jnp.ndarray         # [T, n_internal] int32
+    thr: jnp.ndarray          # [T, n_internal] f32
+    leaf: jnp.ndarray         # [T, n_leaves] f32
+    y_scale: jnp.ndarray      # [] normalization
+
+
+def _route(feat, thr, X):
+    """Route samples down one tree. feat/thr [n_internal], X [n,d] ->
+    leaf index [n]."""
+    n = X.shape[0]
+    idx = jnp.zeros(n, jnp.int32)           # node id in level order
+    depth = int(np.log2(feat.shape[0] + 1))
+    for _ in range(depth):
+        f = feat[idx]
+        t = thr[idx]
+        go_right = X[jnp.arange(n), f] > t
+        idx = 2 * idx + 1 + go_right.astype(jnp.int32)
+    return idx - feat.shape[0]              # leaf-local index
+
+
+def _fit_tree(X, r, w, orders, depth):
+    """One regression tree minimizing weighted MSE on residuals r."""
+    n, d = X.shape
+    n_internal = 2 ** depth - 1
+    feat = jnp.zeros(n_internal, jnp.int32)
+    thr = jnp.full(n_internal, jnp.inf, jnp.float32)
+    node = jnp.zeros(n, jnp.int32)          # local node id at current level
+
+    for level in range(depth):
+        M = 2 ** level
+        best_gain = jnp.full((M,), NEG)
+        best_feat = jnp.zeros((M,), jnp.int32)
+        best_thr = jnp.full((M,), jnp.inf, jnp.float32)
+        for f in range(d):
+            o = orders[f]
+            a_s, w_s, r_s, x_s = node[o], w[o], r[o], X[o, f]
+            oh = (a_s[:, None] == jnp.arange(M)).astype(jnp.float32)
+            ws = w_s[:, None] * oh                       # [n, M]
+            cw = jnp.cumsum(ws, 0)
+            cwr = jnp.cumsum(ws * r_s[:, None], 0)
+            tw, twr = cw[-1], cwr[-1]
+            lw, lr_ = cw, cwr
+            rw, rr = tw - cw, twr - cwr
+            gain = (jnp.square(lr_) / jnp.maximum(lw, 1e-12)
+                    + jnp.square(rr) / jnp.maximum(rw, 1e-12)
+                    - jnp.square(twr) / jnp.maximum(tw, 1e-12))
+            x_next = jnp.concatenate([x_s[1:], x_s[-1:]])
+            valid = (lw > 1e-9) & (rw > 1e-9) & ((x_next > x_s)[:, None])
+            gain = jnp.where(valid, gain, NEG)
+            gi = jnp.argmax(gain, axis=0)                # [M]
+            gv = jnp.take_along_axis(gain, gi[None], 0)[0]
+            tv = 0.5 * (x_s[gi] + x_next[gi])
+            better = gv > best_gain
+            best_gain = jnp.where(better, gv, best_gain)
+            best_feat = jnp.where(better, f, best_feat)
+            best_thr = jnp.where(better, tv.astype(jnp.float32), best_thr)
+        base = 2 ** level - 1
+        feat = feat.at[base + jnp.arange(M)].set(best_feat)
+        # unsplittable nodes: thr=inf sends everything left
+        thr = thr.at[base + jnp.arange(M)].set(
+            jnp.where(best_gain > NEG / 2, best_thr, jnp.inf))
+        # descend
+        f_cur = best_feat[node]
+        t_cur = jnp.where(best_gain > NEG / 2, best_thr, jnp.inf)[node]
+        node = 2 * node + (X[jnp.arange(n), f_cur] > t_cur).astype(jnp.int32)
+
+    # predict-consistent leaf values
+    leaf_idx = _route(feat, thr, X)
+    n_leaves = 2 ** depth
+    oh = (leaf_idx[:, None] == jnp.arange(n_leaves)).astype(jnp.float32)
+    sw = (w[:, None] * oh).sum(0)
+    swr = (w[:, None] * oh * r[:, None]).sum(0)
+    leaf = swr / jnp.maximum(sw, 1e-12)
+    return feat, thr, leaf
+
+
+def gbm_fit(X, y, w, orders, *, n_trees=100, depth=3, lr=0.1,
+            log_target=False) -> GBMParams:
+    """log_target: fit log(y) (multiplicative runtime surfaces become
+    additive, which piecewise-constant trees approximate far better)."""
+    w = w.astype(jnp.float32)
+    if log_target:
+        y = jnp.log(jnp.maximum(y, 1e-6))
+        y_scale = jnp.asarray(0.0)       # sentinel: log mode
+        yn = y
+        wsum = jnp.maximum(w.sum(), 1e-12)
+    else:
+        wsum = jnp.maximum(w.sum(), 1e-12)
+        y_scale = jnp.maximum((w * jnp.abs(y)).sum() / wsum, 1e-12)
+        yn = y / y_scale
+    f0 = (w * yn).sum() / wsum
+    pred = jnp.full_like(yn, f0)
+
+    def boost(pred, _):
+        r = yn - pred
+        feat, thr, leaf = _fit_tree(X, r, w, orders, depth)
+        leaf_idx = _route(feat, thr, X)
+        pred = pred + lr * leaf[leaf_idx]
+        return pred, (feat, thr, leaf)
+
+    _, (feats, thrs, leaves) = jax.lax.scan(boost, pred, None, length=n_trees)
+    return GBMParams(f0, feats, thrs, lr * leaves, y_scale)
+
+
+def gbm_predict(params: GBMParams, X) -> jnp.ndarray:
+    def one(carry, tree):
+        feat, thr, leaf = tree
+        return carry + leaf[_route(feat, thr, X)], None
+
+    out, _ = jax.lax.scan(one, jnp.full(X.shape[0], params.f0),
+                          (params.feat, params.thr, params.leaf))
+    return jnp.where(params.y_scale == 0.0,
+                     jnp.exp(jnp.clip(out, -30.0, 30.0)),
+                     out * jnp.maximum(params.y_scale, 1e-12))
+
+
+def _make_aux(X: np.ndarray):
+    return {"orders": jnp.asarray(np.argsort(X, axis=0).T)}   # [d, n]
+
+
+def _fit(X, y, w, aux):
+    return gbm_fit(X, y, w, aux["orders"], n_trees=200, depth=3, lr=0.1,
+                   log_target=True)
+
+
+def _predict(params, X, aux):
+    return gbm_predict(params, X)
+
+
+register_model(ModelSpec("gbm", _make_aux, _fit, _predict))

@@ -1,0 +1,50 @@
+"""Weighted ridge regression + polynomial bases (building blocks for BOM)."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.models.api import ModelSpec, register_model
+
+
+class RidgeParams(NamedTuple):
+    beta: jnp.ndarray       # [d+1] (bias last)
+    mu: jnp.ndarray         # [d] feature means
+    sd: jnp.ndarray         # [d] feature stds
+
+
+def ridge_fit(X, y, w, lam=1e-4) -> RidgeParams:
+    w = w.astype(jnp.float32)
+    wsum = jnp.maximum(w.sum(), 1e-12)
+    mu = (w[:, None] * X).sum(0) / wsum
+    var = (w[:, None] * jnp.square(X - mu)).sum(0) / wsum
+    sd = jnp.sqrt(jnp.maximum(var, 1e-12))
+    Xn = (X - mu) / sd
+    A = jnp.concatenate([Xn, jnp.ones((X.shape[0], 1))], 1)
+    Aw = A * w[:, None]
+    G = A.T @ Aw + lam * jnp.eye(A.shape[1])
+    b = Aw.T @ y
+    beta = jnp.linalg.solve(G, b)
+    return RidgeParams(beta, mu, sd)
+
+
+def ridge_predict(p: RidgeParams, X) -> jnp.ndarray:
+    Xn = (X - p.mu) / p.sd
+    A = jnp.concatenate([Xn, jnp.ones((X.shape[0], 1))], 1)
+    return A @ p.beta
+
+
+def poly_basis(s, degree: int):
+    """s [n] -> [n, degree] powers 1..degree (no constant)."""
+    return jnp.stack([s ** k for k in range(1, degree + 1)], axis=1)
+
+
+register_model(ModelSpec(
+    "linreg",
+    lambda X: {},
+    lambda X, y, w, aux: ridge_fit(X, y, w),
+    lambda p, X, aux: ridge_predict(p, X)))

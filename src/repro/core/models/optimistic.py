@@ -1,0 +1,121 @@
+"""Optimistic models (paper §V-B): SSM (x) IBM factorization.
+
+Assumes runtime-influencing factors are pairwise independent:
+    t(s, ctx) = IBM(ctx) * g(s),   g(1) = 1
+The scale-out-to-speedup model (SSM) g is learned from *context groups* —
+sets of runs identical in every feature except the scale-out (column 0).
+Groups with fewer than two (weighted) members carry no scale-out signal and
+are excluded from the SSM fit; if no group qualifies, the SSM is
+underdetermined and predictions degrade sharply — reproducing the paper's
+observation that BOM is "gravely incorrect" below ~10 training points.
+
+  BOM: third-degree-polynomial SSM, linear-regression IBM
+  OGB: GBM SSM, GBM IBM
+
+The group one-hot is padded to [n, n] columns so its shape depends only on
+the training-set size: jit compiles once per scenario, not per split.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.models.api import ModelSpec, register_model
+from repro.core.models.gbm import gbm_fit, gbm_predict
+from repro.core.models.linear import ridge_fit, ridge_predict
+
+MIN_RATIO = 0.05
+
+
+class OptimisticParams(NamedTuple):
+    ssm: object               # RidgeParams (poly basis) or GBMParams
+    ssm_ref: jnp.ndarray      # g(1) normalizer
+    ibm: object               # RidgeParams or GBMParams
+
+
+def _poly_feats(s):
+    s = jnp.maximum(s, 1e-6)
+    return jnp.stack([s, s ** 2, s ** 3], axis=1)
+
+
+def _split(X):
+    s = X[:, 0]
+    ctx = X[:, 1:] if X.shape[1] > 1 else jnp.zeros((X.shape[0], 1))
+    return s, ctx
+
+
+def _make_aux(X: np.ndarray):
+    n = X.shape[0]
+    ctx = np.round(X[:, 1:].astype(np.float64), 9)
+    if ctx.shape[1] == 0:
+        gid = np.zeros(n, np.int64)
+    else:
+        _, gid = np.unique(ctx, axis=0, return_inverse=True)
+    onehot = np.zeros((n, n), np.float32)        # padded to n groups
+    onehot[np.arange(n), gid] = 1.0
+    s_np = X[:, :1]
+    ctx_np = X[:, 1:] if X.shape[1] > 1 else np.zeros((n, 1))
+    return {"onehot": jnp.asarray(onehot),
+            "ssm_orders": jnp.asarray(np.argsort(s_np, axis=0).T),
+            "ibm_orders": jnp.asarray(np.argsort(ctx_np, axis=0).T)}
+
+
+def _make(ssm_kind: str, ibm_kind: str, name: str):
+    def ssm_fit(s, ratio, w, aux):
+        if ssm_kind == "poly3":
+            # cubic in log space: g(s) strictly positive; wild coefficients
+            # (the small-data failure mode) still blow up via exp
+            return ridge_fit(_poly_feats(s),
+                             jnp.log(jnp.maximum(ratio, 1e-3)), w, lam=3e-3)
+        return gbm_fit(s[:, None], ratio, w, aux["ssm_orders"],
+                       n_trees=50, depth=2, lr=0.15, log_target=True)
+
+    def ssm_eval(p, s):
+        if ssm_kind == "poly3":
+            return jnp.exp(jnp.clip(ridge_predict(p, _poly_feats(s)),
+                                    -4.0, 4.0))
+        return gbm_predict(p, s[:, None])
+
+    def ibm_fit(ctx, t1, w, aux):
+        if ibm_kind == "linreg":
+            return ridge_fit(ctx, t1, w)
+        return gbm_fit(ctx, t1, w, aux["ibm_orders"], n_trees=100, depth=3,
+                       lr=0.1, log_target=True)
+
+    def ibm_eval(p, ctx):
+        if ibm_kind == "linreg":
+            return ridge_predict(p, ctx)
+        return gbm_predict(p, ctx)
+
+    def fit(X, y, w, aux):
+        s, ctx = _split(X)
+        onehot = aux["onehot"]
+        w = w.astype(jnp.float32)
+        logt = jnp.log(jnp.maximum(y, 1e-6))
+        wg = w[:, None] * onehot                             # [n, G]
+        cnt = wg.sum(0)
+        beta = (wg * logt[:, None]).sum(0) / jnp.maximum(cnt, 1e-12)
+        eligible_g = (cnt >= 1.5).astype(jnp.float32)        # >=2 members
+        base = jnp.exp(onehot @ beta)
+        ratio = y / jnp.maximum(base, 1e-9)
+        w_ssm = w * (onehot @ eligible_g)
+        ssm_p = ssm_fit(s, ratio, w_ssm, aux)
+        g_raw = jnp.maximum(ssm_eval(ssm_p, s), MIN_RATIO)
+        g1 = jnp.maximum(ssm_eval(ssm_p, jnp.ones((1,)))[0], MIN_RATIO)
+        t1 = y / (g_raw / g1)                                # project s -> 1
+        ibm_p = ibm_fit(ctx, t1, w, aux)
+        return OptimisticParams(ssm_p, g1, ibm_p)
+
+    def predict(p: OptimisticParams, X, aux):
+        s, ctx = _split(X)
+        g = jnp.maximum(ssm_eval(p.ssm, s), MIN_RATIO) / p.ssm_ref
+        return ibm_eval(p.ibm, ctx) * g
+
+    return ModelSpec(name, _make_aux, fit, predict)
+
+
+register_model(_make("poly3", "linreg", "bom"))
+register_model(_make("gbm", "gbm", "ogb"))

@@ -1,0 +1,120 @@
+"""The C3O runtime predictor (paper §V): dynamic model selection.
+
+On every (re)fit, all candidate models are cross-validated on the current
+training data with leave-one-out folds (capped, paper §VI-C: the selection
+phase must be bounded as data grows) and the lowest-MAPE model is selected.
+The CV residuals of the selected model calibrate the Gaussian error model
+(mu, sigma) the configurator's confidence formula consumes (paper §IV-B).
+
+All folds of one model are evaluated as a single vmapped, jitted computation.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.models.api import get_model
+
+DEFAULT_MODELS = ("ernest", "gbm", "bom", "ogb")
+
+
+@functools.lru_cache(maxsize=None)
+def _cv_fn(spec):
+    """Batched LOO-CV executable per model spec (stable identity -> one jit
+    cache entry per data shape, shared across all train/test splits)."""
+
+    def one_fold(X, y, aux, w, i):
+        params = spec.fit(X, y, w, aux)
+        return spec.predict(params, X[i][None, :], aux)[0]
+
+    return jax.jit(jax.vmap(one_fold, in_axes=(None, None, None, 0, 0)))
+
+
+def _cv_predictions(spec, X, y, folds: np.ndarray):
+    """Held-out predictions for each LOO fold (vmapped weighted refits)."""
+    n = len(y)
+    aux = spec.make_aux(np.asarray(X, np.float64))
+    Xj = jnp.asarray(X, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    W = 1.0 - jax.nn.one_hot(jnp.asarray(folds), n)          # [F, n]
+    out = _cv_fn(spec)(Xj, yj, aux, W, jnp.asarray(folds))
+    return np.asarray(out, np.float64)
+
+
+@dataclass
+class C3OPredictor:
+    model_names: Sequence[str] = DEFAULT_MODELS
+    max_cv_folds: int = 30
+    seed: int = 0
+
+    # set by fit():
+    selected: Optional[str] = None
+    cv_mape: Dict[str, float] = field(default_factory=dict)
+    mu: float = 0.0
+    sigma: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "C3OPredictor":
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        n = len(y)
+        rng = np.random.default_rng(self.seed)
+        folds = (np.arange(n) if n <= self.max_cv_folds
+                 else rng.choice(n, self.max_cv_folds, replace=False))
+        best, best_err = None, np.inf
+        residuals = None
+        for name in self.model_names:
+            spec = get_model(name)
+            pred = _cv_predictions(spec, X, y, folds)
+            pred = np.nan_to_num(pred, nan=1e12, posinf=1e12, neginf=-1e12)
+            ape = np.abs(pred - y[folds]) / np.maximum(np.abs(y[folds]), 1e-9)
+            mape = float(np.mean(ape))
+            self.cv_mape[name] = mape
+            if mape < best_err:
+                best, best_err = name, mape
+                residuals = pred - y[folds]          # seconds, signed
+        self.selected = best
+        self.mu = float(np.mean(residuals))
+        self.sigma = float(np.std(residuals) + 1e-12)
+        from repro.core.models.api import FittedModel
+        self._fitted = FittedModel(get_model(best), X, y)
+        return self
+
+    def predict(self, X) -> np.ndarray:
+        return self._fitted.predict(np.asarray(X, np.float64))
+
+    def predict_with_error(self, X) -> Tuple[np.ndarray, float, float]:
+        """(predictions, mu, sigma) — sigma from CV residuals (paper §IV-B)."""
+        return self.predict(X), self.mu, self.sigma
+
+
+def evaluate_split(model_names, X_tr, y_tr, X_te, y_te,
+                   include_c3o: bool = True, max_cv_folds: int = 20,
+                   seed: int = 0) -> Dict[str, float]:
+    """MAPE of each model (and the C3O predictor) for one train/test split.
+
+    This is the evaluation protocol of paper §VI-C: individual models are fit
+    on the train split and scored on the test split; the C3O row additionally
+    runs model selection (LOO on the train split) before scoring.
+    """
+    from repro.core.models.api import FittedModel
+    out = {}
+    for name in model_names:
+        fm = FittedModel(get_model(name), X_tr, y_tr)
+        pred = np.nan_to_num(fm.predict(X_te), nan=1e12, posinf=1e12,
+                             neginf=-1e12)
+        out[name] = float(np.mean(np.abs(pred - y_te)
+                                  / np.maximum(np.abs(y_te), 1e-9)))
+    if include_c3o:
+        p = C3OPredictor(model_names=model_names, max_cv_folds=max_cv_folds,
+                         seed=seed).fit(X_tr, y_tr)
+        pred = np.nan_to_num(p.predict(X_te), nan=1e12, posinf=1e12,
+                             neginf=-1e12)
+        out["c3o"] = float(np.mean(np.abs(pred - y_te)
+                                   / np.maximum(np.abs(y_te), 1e-9)))
+        out["c3o_selected"] = p.selected
+    return out

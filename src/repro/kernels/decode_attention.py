@@ -1,0 +1,101 @@
+"""Flash-decode kernel (Pallas, TPU target): one query token vs. a long KV
+cache, parallelized over cache blocks.
+
+Grid (batch, kv-heads, cache-blocks), cache-block dim innermost with running
+(max, sum, acc) scratch over the G=H/KV query rows of this kv head — the same
+online-softmax trick as flash attention, but with the *cache length* as the
+streamed dimension, which is what serving long contexts (decode_32k /
+long_500k cells) needs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, window, softcap, blk, n_blocks, length):
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)               # [blk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, blk]
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = bi * blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = (k_pos <= pos) & (k_pos < length)
+    if window:
+        ok &= k_pos > pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(bi == n_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, softcap=0.0,
+                     scale=None, block=1024, interpret=False):
+    """q [B,H,hd]; caches [B,L,KV,hd]; pos scalar int32 -> [B,H,hd]."""
+    B, H, hd = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    blk = min(block, L)
+    Lp = math.ceil(L / blk) * blk
+    qg = q.reshape(B, KV, G, hd)
+    kt = jnp.pad(k_cache.transpose(0, 2, 1, 3),
+                 ((0, 0), (0, 0), (0, Lp - L), (0, 0)))
+    vt = jnp.pad(v_cache.transpose(0, 2, 1, 3),
+                 ((0, 0), (0, 0), (0, Lp - L), (0, 0)))
+    n_blocks = Lp // blk
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               softcap=softcap, blk=blk, n_blocks=n_blocks,
+                               length=L)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, bi: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk, hd), lambda b, h, bi: (b, h, bi, 0)),
+            pl.BlockSpec((1, 1, blk, hd), lambda b, h, bi: (b, h, bi, 0)),
+            pl.BlockSpec((1,), lambda b, h, bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, bi: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[_vmem((G,)), _vmem((G,)), _vmem((G, hd))],
+        interpret=interpret,
+    )(qg, kt, vt, pos_arr)
+    return out.reshape(B, H, hd)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,116 @@
+"""Flash attention forward kernel (Pallas, TPU target).
+
+Blocked online-softmax: grid (batch, q-heads, q-blocks, kv-blocks) with the
+kv-block dimension innermost (sequential on TPU), carrying the running
+(max, sum, accumulator) in VMEM scratch.  Supports causal masking, sliding
+windows, attention-logit softcapping (gemma2) and GQA (kv head = q head // G
+via the k/v BlockSpec index maps).
+
+Block shapes are MXU-aligned (multiples of 128 on the contracting/lane dims);
+the VMEM working set per program is
+  q_blk*hd + 2*kv_blk*hd (+ scores q_blk*kv_blk) floats,
+e.g. 512x128 blocks with hd=128 -> ~0.7 MB, far under the ~16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+DEFAULT_Q_BLOCK = 512
+DEFAULT_KV_BLOCK = 512
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, softcap, q_blk, kv_blk, n_kv_blocks,
+                  seq_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [q_blk, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [kv_blk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [q_blk, kv_blk]
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_pos < seq_len
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, q_block=DEFAULT_Q_BLOCK,
+                    kv_block=DEFAULT_KV_BLOCK, interpret=False):
+    """q [B,S,H,h]; k,v [B,S,KV,h] -> [B,S,H,h] (forward only)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    q_blk = min(q_block, S)
+    kv_blk = min(kv_block, S)
+    # pad S to block multiples
+    Sp = math.ceil(S / q_blk) * q_blk
+    Skp = math.ceil(S / kv_blk) * kv_blk
+    Sp = Skp = max(Sp, Skp)
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    n_q, n_kv = Sp // q_blk, Sp // kv_blk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_blk=q_blk, kv_blk=kv_blk, n_kv_blocks=n_kv,
+        seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_blk, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kv_blk, hd), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((q_blk,)), _vmem((q_blk,)), _vmem((q_blk, hd)),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :S].transpose(0, 2, 1, 3)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

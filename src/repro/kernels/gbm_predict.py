@@ -1,0 +1,87 @@
+"""Boosted-tree ensemble inference kernel (Pallas, TPU target).
+
+The paper's own compute hot-spot: the cluster configurator evaluates the
+runtime predictor over every candidate configuration (machine types x
+scale-outs x contexts), and model selection re-predicts during
+cross-validation.  This kernel evaluates a full GBM ensemble for a block of
+input rows per grid step.
+
+TPU adaptation (see DESIGN.md): tree traversal is gather-heavy on CPUs/GPUs;
+here every data-dependent gather is re-cast as a one-hot contraction
+(node-index one-hot @ [n_nodes] arrays, feature one-hot @ [rows, d] block),
+turning the whole traversal into dense VPU/MXU work with no scatter/gather.
+
+Grid: (row-blocks,); trees run in a fori_loop with the accumulator in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gbm_kernel(x_ref, feat_ref, thr_ref, leaf_ref, f0_ref, o_ref, *,
+                n_trees, depth, n_rows):
+    x = x_ref[...].astype(jnp.float32)            # [Bn, d]
+    Bn, d = x.shape
+    n_int = 2 ** depth - 1
+    n_leaf = 2 ** depth
+
+    def one_tree(t, acc):
+        feat = feat_ref[t].astype(jnp.int32)      # [n_int]
+        thr = thr_ref[t].astype(jnp.float32)
+        leaf = leaf_ref[t].astype(jnp.float32)    # [n_leaf]
+        idx = jnp.zeros((Bn,), jnp.int32)
+        for _ in range(depth):
+            node_oh = (idx[:, None] ==
+                       jax.lax.broadcasted_iota(jnp.int32, (Bn, n_int), 1)
+                       ).astype(jnp.float32)
+            f_idx = node_oh @ feat.astype(jnp.float32)        # [Bn]
+            t_val = node_oh @ thr                             # [Bn]
+            feat_oh = (f_idx[:, None] ==
+                       jax.lax.broadcasted_iota(jnp.float32, (Bn, d), 1)
+                       ).astype(jnp.float32)
+            x_f = (x * feat_oh).sum(axis=1)                   # [Bn]
+            idx = 2 * idx + 1 + (x_f > t_val).astype(jnp.int32)
+        leaf_oh = ((idx - n_int)[:, None] ==
+                   jax.lax.broadcasted_iota(jnp.int32, (Bn, n_leaf), 1)
+                   ).astype(jnp.float32)
+        return acc + leaf_oh @ leaf
+
+    acc = jnp.full((Bn,), f0_ref[0], jnp.float32)
+    acc = jax.lax.fori_loop(0, n_trees, one_tree, acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def gbm_predict(X, feat, thr, leaf, f0, y_scale=1.0, *, row_block=256,
+                interpret=False):
+    """X [n,d]; feat/thr [T,n_int]; leaf [T,n_leaf]; f0 scalar -> [n]."""
+    n, d = X.shape
+    T, n_int = feat.shape
+    depth = int(n_int + 1).bit_length() - 1
+    rb = min(row_block, max(n, 8))
+    n_pad = -(-n // rb) * rb
+    Xp = jnp.pad(X.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    # unsplittable nodes carry thr=inf; the one-hot contraction would turn
+    # 0*inf into NaN, so clamp to a large finite sentinel (same routing)
+    thr = jnp.where(jnp.isfinite(thr), thr, 1e30)
+    f0_arr = jnp.broadcast_to(jnp.asarray(f0, jnp.float32), (1,))
+
+    kernel = functools.partial(_gbm_kernel, n_trees=T, depth=depth, n_rows=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((T, n_int), lambda i: (0, 0)),
+            pl.BlockSpec((T, n_int), lambda i: (0, 0)),
+            pl.BlockSpec((T, n_int + 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(Xp, feat, thr, leaf, f0_arr)
+    return out[:n] * y_scale

@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+# ------------------------- flash attention --------------------------------
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None):
+    """q [B,S,H,h]; k,v [B,S,KV,h]. Naive full-matrix attention."""
+    B, Sq, H, h = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = h ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, KV, G, h)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp, kp = jnp.arange(Sq), jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, h)
+
+
+# ------------------------- decode attention -------------------------------
+
+def decode_attention_ref(q, k_cache, v_cache, *, pos, window=0, softcap=0.0,
+                         scale=None):
+    """q [B,H,h]; caches [B,L,KV,h]; attends positions [max(0,pos-window+1)..pos]."""
+    B, H, h = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = h ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, G, h) * scale
+    s = jnp.einsum("bkgh,blkh->bkgl", qg, k_cache).astype(jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kp = jnp.arange(L)
+    ok = kp <= pos
+    if window:
+        ok &= kp > pos - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, H, h)
+
+
+# ------------------------------- wkv6 -------------------------------------
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """Sequential RWKV6 recurrence (exact oracle).
+
+    r,k,v,w [B,S,H,hd] (w = decay in (0,1)); u [H,hd]; s0 [B,H,hd,hd].
+    Returns (y [B,S,H,hd], s_end)."""
+    B, S, H, hd = r.shape
+    s = (jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3)
+               for a in (r, k, v, w))
+    s_end, ys = jax.lax.scan(step, s, xs)
+    return ys.transpose(1, 0, 2, 3), s_end
+
+
+def wkv6_chunked_ref(r, k, v, w, u, s0=None, chunk=16):
+    """Chunked (intra-parallel / inter-recurrent) WKV6 — same math as the
+    Pallas kernel, in jnp.
+
+    Log-space decay products; the intra-chunk score pair is referenced to the
+    mid-chunk decay prefix so both exp() factors stay bounded by
+    exp(chunk/2 * |log w|_max) — with chunk=16 safely inside fp32 range for
+    the full RWKV decay range."""
+    B, S, H, hd = r.shape
+    assert S % chunk == 0
+    n = S // chunk
+    f32 = jnp.float32
+    rc, kc, vc, wc = [a.astype(f32).reshape(B, n, chunk, H, hd)
+                      .transpose(1, 0, 3, 2, 4)  # [n,B,H,C,hd]
+                      for a in (r, k, v, w)]
+    lw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-38)), -9.0)   # see wkv6.py
+    s_init = (jnp.zeros((B, H, hd, hd), f32) if s0 is None
+              else s0.astype(f32))
+    u_ = u.astype(f32)
+
+    def per_chunk(s, inp):
+        r_, k_, v_, lw_ = inp                       # [B,H,C,hd]
+        C = r_.shape[2]
+        cum = jnp.cumsum(lw_, axis=2)               # inclusive decay prefix
+        cum_excl = cum - lw_                        # exclusive prefix
+        ref = cum[:, :, C // 2:C // 2 + 1, :]       # mid-chunk reference
+        # intra-chunk: score[t,s'] = sum_d r_t k_s' exp(cum_excl_t - cum_s')
+        a_sc = r_ * jnp.exp(cum_excl - ref)
+        b_sc = k_ * jnp.exp(ref - cum)
+        sc = jnp.einsum("bhtd,bhsd->bhts", a_sc, b_sc)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        sc = jnp.where(mask, sc, 0.0)
+        diag = jnp.einsum("bhtd,bhtd->bht", r_ * u_[None, :, None, :], k_)
+        y = jnp.einsum("bhts,bhsd->bhtd", sc, v_) + diag[..., None] * v_
+        # cross-chunk: r_t decayed against carried state (exp(cum_excl) <= 1)
+        y = y + jnp.einsum("bhtd,bhdv->bhtv", r_ * jnp.exp(cum_excl), s)
+        # state update: S' = diag(prod w) S + sum_s (prod_{i>s} w_i) k_s v_s
+        decay_all = jnp.exp(cum[:, :, -1:, :])      # [B,H,1,hd]
+        kd = k_ * jnp.exp(cum[:, :, -1:, :] - cum)
+        s = decay_all[:, :, 0, :, None] * s + jnp.einsum(
+            "bhsd,bhsv->bhdv", kd, v_)
+        return s, y
+
+    s_end, ys = jax.lax.scan(per_chunk, s_init, (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return y, s_end
+
+
+# ------------------------------ mamba scan --------------------------------
+
+def mamba_scan_ref(u, dt, A, B_in, C_in, h0=None):
+    """Selective scan oracle.  u,dt [B,S,D]; A [D,N]; B_in,C_in [B,S,N].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t;  y_t = C_t . h_t
+    Returns (y [B,S,D], h_end [B,D,N])."""
+    Bb, S, D = u.shape
+    N = A.shape[1]
+    f32 = jnp.float32
+    h = jnp.zeros((Bb, D, N), f32) if h0 is None else h0.astype(f32)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A[None])
+        h = dA * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (u.astype(f32).transpose(1, 0, 2), dt.astype(f32).transpose(1, 0, 2),
+          B_in.astype(f32).transpose(1, 0, 2), C_in.astype(f32).transpose(1, 0, 2))
+    h_end, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2), h_end
+
+
+# ------------------------------ gbm predict -------------------------------
+
+def gbm_predict_ref(X, feat, thr, leaf, f0):
+    """Boosted-ensemble inference oracle.  X [n,d]; feat/thr [T, n_internal];
+    leaf [T, n_leaves]; returns [n]."""
+    n = X.shape[0]
+    T, n_int = feat.shape
+    import numpy as np
+    depth = int(np.log2(n_int + 1))
+    out = jnp.full((n,), f0, jnp.float32)
+
+    def tree(out, t):
+        ft, th, lf = t
+        idx = jnp.zeros(n, jnp.int32)
+        for _ in range(depth):
+            f = ft[idx]
+            go_right = X[jnp.arange(n), f] > th[idx]
+            idx = 2 * idx + 1 + go_right.astype(jnp.int32)
+        return out + lf[idx - n_int], None
+
+    out, _ = jax.lax.scan(tree, out, (feat, thr, leaf))
+    return out

@@ -1,0 +1,109 @@
+"""WKV6 chunked linear-attention kernel (Pallas, TPU target).
+
+RWKV6 recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                  y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+evaluated chunk-parallel: within a chunk of C tokens the interaction is a
+[C, C] masked score matrix (log-space decay products, mid-chunk reference so
+all exponents stay inside fp32 range); across chunks only the [hd, hd] state
+is carried in VMEM scratch.  Grid (batch, heads, chunks), chunk dim innermost.
+
+This is the TPU adaptation of the CUDA wkv kernels (hardware-adaptation note
+in DESIGN.md): instead of per-thread serial state updates, the chunk-local
+work is cast as two MXU matmuls ([C,hd]x[hd,C] scores, [C,C]x[C,hd] values)
+plus a rank-C state update, which is how the systolic array wants it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s_out_ref,
+                 s_scr, *, n_chunks, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # [C, hd]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # [hd]
+    s = s_scr[...]                               # [hd, hd]
+
+    C = chunk
+    cum = jnp.cumsum(lw, axis=0)                 # [C, hd] inclusive
+    cum_excl = cum - lw
+    ref = cum[C // 2][None, :]                   # mid-chunk reference
+    a_sc = r * jnp.exp(cum_excl - ref)
+    b_sc = k * jnp.exp(ref - cum)
+    sc = jax.lax.dot_general(a_sc, b_sc, (((1,), (1,)), ((), ())))  # [C, C]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    sc = jnp.where(si < ti, sc, 0.0)
+    diag = (r * u[None, :] * k).sum(axis=1)      # [C]
+    y = jax.lax.dot_general(sc, v, (((1,), (0,)), ((), ())))
+    y = y + diag[:, None] * v
+    y = y + jax.lax.dot_general(r * jnp.exp(cum_excl), s,
+                                (((1,), (0,)), ((), ())))
+    # state update
+    decay_all = jnp.exp(cum[C - 1])              # [hd]
+    kd = k * jnp.exp(cum[C - 1][None, :] - cum)
+    s_scr[...] = decay_all[:, None] * s + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())))
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        s_out_ref[0, 0] = s_scr[...].astype(s_out_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, s0=None, *, chunk=16, interpret=False):
+    """r,k,v,w [B,S,H,hd]; u [H,hd]; s0 [B,H,hd,hd] -> (y, s_end)."""
+    B, S, H, hd = r.shape
+    assert S % chunk == 0, f"S={S} % chunk={chunk}"
+    n = S // chunk
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    # per-step log-decay clamped at -9 (w >= 1.2e-4): contributions below
+    # that die within a step at fp32 precision, and the clamp bounds the
+    # chunk-local exponents to chunk/2 * 9 = 72, inside fp32 range
+    lw = jnp.maximum(jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38)), -9.0)
+    # [B,H,S,hd] layout
+    rt, kt, vt = [a.transpose(0, 2, 1, 3) for a in (r, k, v)]
+    lwt = lw.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_wkv6_kernel, n_chunks=n, chunk=chunk)
+    y, s_end = pl.pallas_call(
+        kernel,
+        grid=(B, H, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((hd, hd))],
+        interpret=interpret,
+    )(rt, kt, vt, lwt, u, s0)
+    return y.transpose(0, 2, 1, 3), s_end
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

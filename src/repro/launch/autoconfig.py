@@ -1,0 +1,130 @@
+"""C3O-for-TPU: the paper's technique applied to the framework's own domain.
+
+"Machine types" are TPU slice families, "scale-out" is the chip count, and a
+"job" is an (arch x input-shape) workload.  Shared runtime records — step
+times from real runs (launch/train.py --runtime-log) and roofline-derived
+estimates from the dry-run — feed the identical C3O predictor + configurator
+stack: LOO-CV model selection, Gaussian-confidence scale-out choice, cost
+menus.  A new user bringing kimi-k2 to a fresh project gets a mesh
+recommendation from collaboratively shared records without profiling runs —
+exactly the paper's value proposition, transplanted to pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.core.configurator import Configurator
+from repro.core.datastore import RuntimeDataStore
+from repro.core.features import JobSchema, RuntimeData
+from repro.core.predictor import C3OPredictor
+from repro.launch.analytic import analytic_cost
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+@dataclass(frozen=True)
+class SliceFamily:
+    name: str
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    hbm_gb: float
+    price_per_chip_h: float
+
+
+SLICES: Dict[str, SliceFamily] = {
+    "v5e": SliceFamily("v5e", PEAK_FLOPS, HBM_BW, ICI_BW, 16.0, 1.20),
+    "v5p": SliceFamily("v5p", 459e12, 2765e9, 90e9, 95.0, 4.20),
+    "v4": SliceFamily("v4", 275e12, 1228e9, 60e9, 32.0, 3.22),
+}
+
+TPU_SCHEMA = JobSchema(
+    "tpu_step", ("tokens_per_step", "params_b", "active_params_b"),
+    base_features=("scale_out", "seq_len"))
+
+
+def _mesh_for(chips: int) -> Dict[str, int]:
+    model = 16 if chips >= 256 else max(chips // 16, 1)
+    return {"data": chips // model, "model": model}
+
+
+def predicted_step_time(cfg: ModelConfig, shape: ShapeConfig,
+                        slice_fam: SliceFamily, chips: int) -> float:
+    """Roofline-model step time on a slice family (the 'simulator' that
+    stands in for real multi-pod measurements in this offline container)."""
+    ana = analytic_cost(cfg, shape, _mesh_for(chips))
+    return max(ana.flops / slice_fam.peak_flops,
+               ana.hbm_bytes / slice_fam.hbm_bw,
+               ana.coll_bytes / slice_fam.ici_bw)
+
+
+def simulate_runtime_records(arch: str, shape_name: str,
+                             slice_name: str = "v5e",
+                             chip_counts: Sequence[int] = (64, 128, 256, 512),
+                             contexts: int = 4, reps: int = 3,
+                             noise: float = 0.06, seed: int = 0
+                             ) -> RuntimeData:
+    """Shared runtime data as produced by many users' training runs: the
+    same arch at several chip counts, with varying per-user context (batch
+    scaling) and measurement noise; medians of ``reps`` runs."""
+    rng = np.random.default_rng(seed)
+    shape0 = SHAPES[shape_name]
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    rows, ys = [], []
+    fam = SLICES[slice_name]
+    for ctx in range(contexts):
+        bs = max(shape0.global_batch >> ctx, 32)
+        shape = dataclasses.replace(shape0, global_batch=bs)
+        for chips in chip_counts:
+            t = predicted_step_time(cfg, shape, fam, chips)
+            runs = t * rng.lognormal(0.0, noise, reps)
+            rows.append([chips, shape.seq_len, bs * shape.seq_len,
+                         counts["total"] / 1e9, counts["active"] / 1e9])
+            ys.append(float(np.median(runs)))
+    n = len(ys)
+    return RuntimeData(TPU_SCHEMA, np.asarray([slice_name] * n),
+                       np.asarray(rows, np.float64), np.asarray(ys))
+
+
+def autoconfigure(arch: str, shape_name: str, *,
+                  step_budget_s: Optional[float] = None,
+                  slice_name: str = "v5e",
+                  chip_counts: Sequence[int] = (64, 128, 256, 512),
+                  store: Optional[RuntimeDataStore] = None,
+                  confidence: float = 0.95, seed: int = 0):
+    """Pick (slice, chips) for a workload from shared runtime records.
+
+    Returns (ClusterChoice, predictor) — the paper's workflow steps 2-5 with
+    TPU slices in place of EC2 machine types."""
+    data = (store.data if store is not None
+            else simulate_runtime_records(arch, shape_name,
+                                          slice_name=slice_name,
+                                          chip_counts=chip_counts, seed=seed))
+    d = data.filter_machine(slice_name)
+    pred = C3OPredictor(seed=seed).fit(d.X, d.y)
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    ctx_row = np.asarray([shape.seq_len,
+                          shape.global_batch * shape.seq_len,
+                          counts["total"] / 1e9, counts["active"] / 1e9])
+
+    fam = SLICES[slice_name]
+
+    def bottleneck(ctx, chips):
+        # weights + optimizer must fit the slice's HBM
+        opt_b = 8.0 if cfg.optimizer == "adamw" else 0.5
+        need = counts["total"] * (2.0 + opt_b) / chips
+        return need > 0.9 * fam.hbm_gb * 2 ** 30
+
+    conf = Configurator(pred, slice_name,
+                        {s.name: s.price_per_chip_h for s in SLICES.values()},
+                        chip_counts, confidence=confidence,
+                        bottleneck_fn=bottleneck)
+    choice = conf.choose_scaleout(ctx_row, t_max=step_budget_s)
+    return choice, pred

@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lowers selected cells with optimization
+overrides, recording hypothesis -> change -> before/after roofline terms.
+
+Three cells (chosen per the assignment: worst roofline fraction, most
+collective-bound, most representative of serving the technique at scale):
+  gemma3-1b  train_4k    collective-bound -> FSDP off (+bf16 grad accum)
+  kimi-k2    train_4k    memory violation + compute-bound -> chunked CE,
+                         bf16 accumulation, triangle attention, accum 8->4
+  deepseek   decode_32k  memory-bound serving -> int8 KV cache
+"""
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+ITERS = [
+    # (tag, arch, shape, overrides, hypothesis)
+    ("gemma3_train.baseline+chunkedCE", "gemma3-1b", "train_4k", {},
+     "iteration 0 (chunked CE now default): same collective bound as baseline"),
+    ("gemma3_train.no_fsdp", "gemma3-1b", "train_4k",
+     {"fsdp": False},
+     "1B params: replicating weights kills 3x-per-microbatch FSDP gathers; "
+     "one gradient all-reduce replaces per-microbatch reduce-scatter -> "
+     "collective term down ~2.5-3x"),
+    ("gemma3_train.no_fsdp+bf16acc", "gemma3-1b", "train_4k",
+     {"fsdp": False, "grad_accum_dtype": "bfloat16"},
+     "bf16 gradient all-reduce halves the remaining DP wire bytes"),
+    ("kimi_train.memfix", "kimi-k2-1t-a32b", "train_4k", {},
+     "chunked CE + bf16 accumulation (now config defaults) remove the 43GB "
+     "logits+accum buffers -> fits 16GB HBM"),
+    ("kimi_train.triangle", "kimi-k2-1t-a32b", "train_4k",
+     {"attention_impl": "blocked_tri"},
+     "exact-triangle attention halves causal attention FLOPs -> compute term "
+     "down by the attention share (~10-15%)"),
+    ("kimi_train.accum4", "kimi-k2-1t-a32b", "train_4k",
+     {"attention_impl": "blocked_tri", "grad_accum": 4},
+     "half the microbatches -> half the FSDP weight-gather rounds; activation "
+     "memory doubles (check fits)"),
+    ("deepseek_decode.int8kv", "deepseek-7b", "decode_32k",
+     {"kv_cache_dtype": "int8"},
+     "int8 KV cache: 2 bytes->1.06 bytes per cache element: memory term "
+     "~-45%, and the 27GB cache fits"),
+    ("jamba_train.memfix", "jamba-1.5-large-398b", "train_4k", {},
+     "post-fix re-run of the worst-bound cell (chunked CE + bf16 accum)"),
+    ("jamba_decode.spfix", "jamba-1.5-large-398b", "decode_32k", {},
+     "EP shard_map SP guard: decode (S=1) no longer asserts"),
+    ("kimi_decode.spfix", "kimi-k2-1t-a32b", "decode_32k", {},
+     "EP shard_map SP guard: decode (S=1) no longer asserts"),
+    ("jamba_long.spfix", "jamba-1.5-large-398b", "long_500k", {},
+     "EP shard_map SP guard + int8-free long-context decode"),
+    ("minicpm3_train.spfix", "minicpm3-4b", "train_4k", {},
+     "SP residuals for the 40-head (indivisible) arch -> seq-parallel "
+     "attention instead of replicated compute; chunked CE"),
+    ("gemma2_train.memfix", "gemma2-2b", "train_4k", {},
+     "chunked CE removes the 17GB fp32 logits for the 256k vocab"),
+    ("seamless_train.memfix", "seamless-m4t-medium", "train_4k", {},
+     "chunked CE (256k vocab)"),
+    ("kimi_prefill.memfix", "kimi-k2-1t-a32b", "prefill_32k", {},
+     "prefill computes the head only for the last position -> 43GB logits "
+     "buffer gone"),
+    ("jamba_prefill.memfix", "jamba-1.5-large-398b", "prefill_32k", {},
+     "prefill last-position head"),
+    ("minicpm3_prefill.memfix", "minicpm3-4b", "prefill_32k", {},
+     "prefill last-position head + SP"),
+]
+
+
+def main():
+    out = []
+    for tag, arch, shape, ov, hyp in ITERS:
+        rec = run_cell(arch, shape, multi_pod=False, overrides=ov)
+        rec["tag"] = tag
+        rec["hypothesis"] = hyp
+        rec["overrides"] = {k: str(v) for k, v in ov.items()}
+        out.append(rec)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[ok] {tag}: peak={rec['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"fits={rec['fits_hbm']} c={r['compute_s']*1e3:.1f}ms "
+                  f"m={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+                  f"dom={r['dominant']}", flush=True)
+        else:
+            print(f"[{rec['status']}] {tag}: {rec.get('error','')[:300]}",
+                  flush=True)
+    with open("experiments/perf_iters.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote experiments/perf_iters.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms (seconds, per training/serving step), per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+  collective = collective_wire_bytes_per_device / ICI_bandwidth_per_chip
+
+cost_analysis() reports per-device FLOPs/bytes of the partitioned program.
+Collective bytes are not in cost_analysis, so we parse the optimized HLO and
+apply per-op wire-byte formulas (ring algorithms, n = participant group size):
+
+  all-gather:          result_bytes * (n-1)/n
+  reduce-scatter:      operand_bytes * (n-1)/n
+  all-reduce:          2 * result_bytes * (n-1)/n        (RS + AG)
+  all-to-all:          result_bytes * (n-1)/n
+  collective-permute:  result_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?(\(?[a-z0-9\[\],{}: \)]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Extract collectives with per-device wire bytes from optimized HLO."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        if "-done(" in line:       # avoid double counting start/done pairs
+            continue
+        result_sig, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(result_sig)
+        # participant group size
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS2_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        if n <= 1:
+            wire = 0
+        elif kind == "all-gather":
+            wire = rb * (n - 1) // n
+        elif kind == "reduce-scatter":
+            wire = rb * (n - 1)          # operand = result * n for RS
+        elif kind == "all-reduce":
+            wire = 2 * rb * (n - 1) // n
+        elif kind == "all-to-all":
+            wire = rb * (n - 1) // n
+        else:                            # collective-permute
+            wire = rb
+        out.append({"kind": kind, "result_bytes": rb, "group": n,
+                    "wire_bytes": wire})
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    per_kind: Dict[str, int] = {}
+    total = 0
+    for c in parse_collectives(hlo_text):
+        per_kind[c["kind"]] = per_kind.get(c["kind"], 0) + c["wire_bytes"]
+        total += c["wire_bytes"]
+    return total, per_kind
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(cost: dict, coll_bytes_per_dev: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    by = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=by / HBM_BW,
+        collective_s=coll_bytes_per_dev / ICI_BW,
+        flops=flops, bytes_accessed=by, coll_bytes=coll_bytes_per_dev)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE), D = tokens
+    processed per step; decode steps process global_batch tokens."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,100 @@
+"""Batched serving driver: continuous decode over a request batch.
+
+Serves a (reduced or full) architecture with prefill + decode steps and the
+KV-cache machinery (ring buffers, optional int8 quantization), reporting
+per-token latency; measured step times feed the C3O runtime log like
+launch/train.py does.
+
+Usage (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --batch 4 --prompt-len 16 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.modeling import model as M
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+
+def run(arch: str, batch: int, prompt_len: int, max_new: int,
+        smoke: bool = True, kv_dtype: str = "", runtime_log: str = None,
+        seed: int = 0):
+    cfg = (smoke_config(arch, kv_cache_dtype=kv_dtype) if smoke
+           else get_config(arch, kv_cache_dtype=kv_dtype))
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    max_seq = prompt_len + max_new + 8
+    cross = prompt_len if cfg.n_encoder_layers else 0
+    cache = M.init_cache(cfg, batch, max_seq, cross_seq=cross)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+
+    key = jax.random.PRNGKey(seed + 1)
+    prompts = {"tokens": jax.random.randint(key, (batch, prompt_len), 0,
+                                            cfg.vocab_size)}
+    if cfg.frontend != "none":
+        prompts["frontend"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, prompt_len if cfg.n_encoder_layers else 8,
+             cfg.frontend_dim)).astype(cfg.dtype)
+        if cfg.n_encoder_layers == 0:
+            prompts["tokens"] = prompts["tokens"][:, 8:]
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)
+    pos = prompt_len
+    lat = []
+    outs = [tok]
+    for _ in range(max_new - 1):
+        t1 = time.time()
+        logits, cache = decode(params, tok, jnp.asarray(pos, jnp.int32),
+                               cache)
+        tok = jnp.argmax(logits, -1)
+        jax.block_until_ready(tok)
+        lat.append(time.time() - t1)
+        outs.append(tok)
+        pos += 1
+    med = float(np.median(lat)) if lat else 0.0
+    print(f"{arch}: prefill({prompt_len} toks x {batch}) {t_prefill*1e3:.1f}ms; "
+          f"decode median {med*1e3:.2f}ms/token "
+          f"(kv={cfg.kv_cache_dtype or cfg.dtype})")
+    if runtime_log:
+        os.makedirs(os.path.dirname(runtime_log) or ".", exist_ok=True)
+        with open(runtime_log, "a") as f:
+            f.write(json.dumps({"arch": arch, "mode": "serve",
+                                "batch": batch, "prompt_len": prompt_len,
+                                "prefill_s": t_prefill,
+                                "decode_median_s": med}) + "\n")
+    return jnp.stack(outs, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--kv-dtype", default="")
+    ap.add_argument("--runtime-log", default=None)
+    args = ap.parse_args()
+    run(args.arch, args.batch, args.prompt_len, args.max_new,
+        smoke=args.smoke, kv_dtype=args.kv_dtype,
+        runtime_log=args.runtime_log)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Abstract input/state stand-ins for AOT lowering (no device allocation).
+
+``input_specs(cfg, shape)`` returns (args, in_shardings, donate) for the step
+function the (arch x shape) cell lowers:
+  train_*    -> train_step(state, batch)
+  prefill_*  -> prefill_step(params, batch, cache)
+  decode_* / long_* -> decode_step(params, tokens, pos, cache)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding
+from repro.modeling import model as M
+from repro.train import train_step as TS
+from repro.train.optimizer import get_optimizer
+
+VLM_PREFIX = 256          # stub ViT patch embeddings prepended to the text
+CROSS_SEQ = 4096          # encoder length cached for enc-dec decode cells
+
+
+def _pad_seq(s: int) -> int:
+    return ((s + 16) // 16) * 16
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.n_encoder_layers > 0:
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+                "frontend": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                                 jnp.dtype(cfg.dtype))}
+    if cfg.frontend != "none":
+        s_txt = S - VLM_PREFIX
+        return {"tokens": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "labels": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "frontend": jax.ShapeDtypeStruct((B, VLM_PREFIX, cfg.frontend_dim),
+                                                 jnp.dtype(cfg.dtype))}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def abstract_state(cfg: ModelConfig):
+    params = M.abstract_params(cfg)
+    opt = get_optimizer(cfg.optimizer)
+    f32 = jnp.float32
+
+    def opt_leaf_adamw(p):
+        return jax.ShapeDtypeStruct(p.shape, f32)
+
+    if cfg.optimizer == "adamw":
+        opt_state = {"m": jax.tree.map(opt_leaf_adamw, params),
+                     "v": jax.tree.map(opt_leaf_adamw, params),
+                     "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    else:
+        def leaf(p):
+            if len(p.shape) >= 2:
+                return {"vr": jax.ShapeDtypeStruct(p.shape[:-1], f32),
+                        "vc": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:], f32)}
+            return {"v": jax.ShapeDtypeStruct(p.shape, f32)}
+        opt_state = {"leaves": jax.tree.map(leaf, params),
+                     "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"params": params, "opt": opt_state,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    state = abstract_state(cfg)
+    batch = abstract_batch(cfg, shape)
+    in_sh = (_ns(mesh, TS.state_specs(cfg, mesh)),
+             _ns(mesh, TS.batch_specs(batch, mesh)))
+    return (state, batch), in_sh
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    max_seq = _pad_seq(S)
+    cross = CROSS_SEQ if cfg.n_encoder_layers > 0 else 0
+    params = M.abstract_params(cfg)
+    batch = abstract_batch(cfg, shape)
+    batch.pop("labels")
+    cache = M.abstract_cache(cfg, B, max_seq, cross_seq=cross)
+    in_sh = (_ns(mesh, M.param_specs(cfg, mesh=mesh)),
+             _ns(mesh, TS.batch_specs(batch, mesh)),
+             _ns(mesh, M.cache_specs(cfg, B, max_seq, cross_seq=cross, mesh=mesh)))
+    return (params, batch, cache), in_sh
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    max_seq = _pad_seq(S)
+    cross = CROSS_SEQ if cfg.n_encoder_layers > 0 else 0
+    params = M.abstract_params(cfg)
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    cache = M.abstract_cache(cfg, B, max_seq, cross_seq=cross)
+    tok_spec = sharding.resolve_spec(("batch",), dims=(B,), mesh=mesh)
+    in_sh = (_ns(mesh, M.param_specs(cfg, mesh=mesh)),
+             NamedSharding(mesh, tok_spec),
+             NamedSharding(mesh, P()),
+             _ns(mesh, M.cache_specs(cfg, B, max_seq, cross_seq=cross, mesh=mesh)))
+    return (params, tokens, pos, cache), in_sh
+
+
+def cell_for(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (step_fn, args, in_shardings, donate_argnums)."""
+    from repro.serve import serve_step as SS
+    if shape.kind == "train":
+        args, in_sh = train_cell(cfg, shape, mesh)
+        return TS.make_train_step(cfg), args, in_sh, (0,)
+    if shape.kind == "prefill":
+        args, in_sh = prefill_cell(cfg, shape, mesh)
+        return SS.make_prefill_step(cfg), args, in_sh, (2,)
+    args, in_sh = decode_cell(cfg, shape, mesh)
+    return SS.make_decode_step(cfg), args, in_sh, (3,)

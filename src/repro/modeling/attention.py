@@ -1,0 +1,494 @@
+"""Attention: GQA/MQA/MHA, MLA, sliding-window, and KV caches.
+
+Three train/prefill implementations (selected by ``cfg.attention_impl``):
+  reference    naive full [S,S] scores (exactness oracle, smoke tests)
+  blocked      kv-chunked online-softmax scan (bounded memory; causal masked
+               rectangle -> ~2x FLOP overcount on causal, see EXPERIMENTS §Perf)
+  blocked_tri  q-chunk-unrolled triangle (exact causal FLOPs; hillclimb result)
+
+Local (sliding-window) layers use a banded gather path; decode uses single-step
+cache attention (ring buffer for windowed layers, absorbed-matmul for MLA).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ATTN_LOCAL
+from repro.distributed import sharding
+from repro.modeling.layers import ParamDef, apply_rope, rope_freqs, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# parameter / cache definitions
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    if cfg.use_mla and not cross:
+        nr = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return {
+            "wq_a": ParamDef((d, cfg.q_lora_rank), ("fsdp", None)),
+            "q_norm": ParamDef((cfg.q_lora_rank,), (None,), "zeros"),
+            "wq_b": ParamDef((cfg.q_lora_rank, cfg.n_heads, nr), (None, "model", None)),
+            "wkv_a": ParamDef((d, cfg.kv_lora_rank + cfg.qk_rope_dim), ("fsdp", None)),
+            "kv_norm": ParamDef((cfg.kv_lora_rank,), (None,), "zeros"),
+            "wkv_b": ParamDef((cfg.kv_lora_rank, cfg.n_heads,
+                               cfg.qk_nope_dim + cfg.v_head_dim), (None, "model", None)),
+            "wo": ParamDef((cfg.n_heads, cfg.v_head_dim, d), ("model", None, "fsdp")),
+        }
+    return {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("fsdp", "model", None)),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("fsdp", "model", None)),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("fsdp", "model", None)),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("model", None, "fsdp")),
+    }
+
+
+def attn_cache_defs(cfg: ModelConfig, batch: int, max_seq: int,
+                    kind: str, cross_seq: int = 0) -> dict:
+    hd = cfg.resolved_head_dim
+    if cross_seq:   # encoder-decoder cross attention: static K/V from encoder
+        return {
+            "k": ParamDef((batch, cross_seq, cfg.n_kv_heads, hd),
+                          ("batch", None, "model", None), "zeros"),
+            "v": ParamDef((batch, cross_seq, cfg.n_kv_heads, hd),
+                          ("batch", None, "model", None), "zeros"),
+        }
+    if cfg.use_mla:
+        # latent cache has no heads dim -> shard the sequence ("flash-decode")
+        return {
+            "ckv": ParamDef((batch, max_seq, cfg.kv_lora_rank),
+                            ("batch", "model", None), "zeros"),
+            "krope": ParamDef((batch, max_seq, cfg.qk_rope_dim),
+                              ("batch", "model", None), "zeros"),
+        }
+    buf = min(max_seq, cfg.window_size) if (kind == ATTN_LOCAL and cfg.window_size) \
+        else max_seq
+    # Shard KV heads over "model" when they divide the production model axis
+    # (16); otherwise shard the cache *sequence* so long-context caches still
+    # spread over the mesh (flash-decode style partial softmax; GSPMD inserts
+    # the max/sum all-reduces).
+    if cfg.n_kv_heads % 16 == 0:
+        kv_ax, seq_ax = "model", None
+    else:
+        kv_ax, seq_ax = None, "model"
+    kv_dt = cfg.kv_cache_dtype or None
+    out = {
+        "k": ParamDef((batch, buf, cfg.n_kv_heads, hd),
+                      ("batch", seq_ax, kv_ax, None), "zeros", dtype=kv_dt),
+        "v": ParamDef((batch, buf, cfg.n_kv_heads, hd),
+                      ("batch", seq_ax, kv_ax, None), "zeros", dtype=kv_dt),
+    }
+    if kv_dt == "int8":      # per-(position, head) symmetric scales
+        for nm in ("k_scale", "v_scale"):
+            out[nm] = ParamDef((batch, buf, cfg.n_kv_heads, 1),
+                               ("batch", seq_ax, kv_ax, None), "zeros",
+                               dtype="bfloat16")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# core score/value computation paths
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """[... Sq, Sk] additive bias from position masks (fp32)."""
+    ok = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, cap: float, scale: float):
+    """Naive softmax attention. q [B,Sq,K,G,h], k [B,Sk,K,h], v [B,Sk,K,hv]."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o
+
+
+def attention_reference(q, k, v, *, q_pos, k_pos, causal=True, window=0,
+                        cap=0.0, scale=None):
+    """q [B,Sq,H,h]; k,v [B,Sk,KV,h(v)] -> [B,Sq,H,hv]."""
+    B, Sq, H, h = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else h ** -0.5
+    qg = q.reshape(B, Sq, KV, G, h)
+    bias = _mask_bias(q_pos, k_pos, causal, window)
+    o = _sdpa(qg, k, v, bias, cap, scale)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+def attention_blocked(q, k, v, *, q_pos, k_pos, causal=True, window=0, cap=0.0,
+                      scale=None, chunk=1024):
+    """KV-chunked online-softmax (rectangle, masked). Bounded memory."""
+    B, Sq, H, h = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else h ** -0.5
+    chunk = min(chunk, Sk)
+    n = -(-Sk // chunk)
+    pad = n * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    qg = (q.reshape(B, Sq, KV, G, h) * scale).astype(q.dtype)
+    kc = k.reshape(B, n, chunk, KV, h).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, chunk, KV, hv).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kj).astype(jnp.float32)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        s = s + _mask_bias(q_pos, pj, causal, window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hv).astype(v.dtype)
+
+
+def attention_triangle(q, k, v, *, q_pos, k_pos, cap=0.0, scale=None,
+                       chunk=2048):
+    """Causal attention with q-chunk unrolling and static growing kv slices.
+
+    Exact-triangle FLOPs (no masked-rectangle waste): q chunk i attends
+    kv[: (i+1)*chunk].  HLO grows O(S/chunk) - chunk chosen to keep that small.
+    """
+    B, Sq, H, h = q.shape
+    KV = k.shape[2]
+    hv = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else h ** -0.5
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0, "triangle path requires seq % chunk == 0"
+    n = Sq // chunk
+    outs = []
+    for i in range(n):
+        qi = q[:, i * chunk:(i + 1) * chunk].reshape(B, chunk, KV, G, h)
+        hi = (i + 1) * chunk
+        ki, vi = k[:, :hi], v[:, :hi]
+        bias = _mask_bias(q_pos[i * chunk:(i + 1) * chunk], k_pos[:hi], True, 0)
+        outs.append(_sdpa(qi * scale, ki, vi, bias, cap, 1.0)
+                    .reshape(B, chunk, H, hv).astype(v.dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_banded(q, k, v, *, q_pos, k_pos, window: int, cap=0.0,
+                     scale=None, chunk=1024):
+    """Sliding-window attention: per-q-chunk banded kv gather (causal).
+
+    FLOPs O(S * (window + chunk)) instead of O(S^2)."""
+    B, Sq, H, h = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hv = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else h ** -0.5
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0
+    n = Sq // chunk
+    band = window + chunk
+
+    qg = (q.reshape(B, n, chunk, KV, G, h) * scale).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(n, chunk)
+    starts = jnp.maximum(jnp.arange(n) * chunk + chunk - band, 0)
+
+    def one(qi, qpi, start):
+        kb = jax.lax.dynamic_slice_in_dim(k, start, min(band, Sk), axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, min(band, Sk), axis=1)
+        pb = jax.lax.dynamic_slice_in_dim(k_pos, start, min(band, Sk), axis=0)
+        bias = _mask_bias(qpi, pb, True, window)
+        return _sdpa(qi, kb, vb, bias, cap, 1.0)
+
+    o = jax.lax.map(lambda xs: one(*xs), (qg, qp, starts))   # [n,B,K,G,chunk,hv]
+    o = o.transpose(1, 4, 0, 2, 3, 5).reshape(B, n, chunk, H, hv)
+    return o.reshape(B, Sq, H, hv).astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window=0, buf_offset=None,
+                     cap=0.0, scale=None):
+    """Single-token attention over a cache. q [B,1,H,h]; caches [B,L,KV,h].
+
+    ``pos``: current absolute position (int32 scalar).  For ring-buffer
+    (windowed) caches, ``buf_offset`` maps buffer slot -> absolute position.
+    """
+    B, _, H, h = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    hv = v_cache.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else h ** -0.5
+    qg = q.reshape(B, KV, G, h) * scale
+    s = jnp.einsum("bkgh,blkh->bkgl", qg, k_cache).astype(jnp.float32)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    k_pos = buf_offset if buf_offset is not None else jnp.arange(L)
+    ok = k_pos <= pos
+    if window:
+        ok &= k_pos > pos - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, hv)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (projections + rope + cache management)
+# ---------------------------------------------------------------------------
+
+def _quantize_kv(x):
+    """[..., hd] -> (int8 values, bf16 scale[..., 1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32)
+                  / jnp.maximum(scale, 1e-8)).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _maybe_shard_heads(x, heads_axis: int = 2):
+    """Shard the heads dim over "model" only when it divides evenly; with
+    odd head counts (minicpm3: 40) the constraint would force sequence
+    replication, so we leave layout propagation to XLA instead."""
+    mesh = sharding.current_mesh()
+    if mesh is None:
+        return x
+    msize = mesh.shape.get("model", 1)
+    if msize > 1 and x.shape[heads_axis] % msize == 0:
+        return sharding.shard(x, "batch", None, "model", None)
+    return x
+
+
+def _select_impl(cfg: ModelConfig, kind: str, causal: bool):
+    if cfg.attention_impl == "reference":
+        return "reference"
+    if kind == ATTN_LOCAL and cfg.window_size and causal:
+        return "banded"
+    if cfg.attention_impl == "blocked_tri" and causal:
+        return "triangle"
+    return "blocked"
+
+
+def _run_attention(cfg, q, k, v, q_pos, k_pos, kind, causal, cap):
+    impl = _select_impl(cfg, kind, causal)
+    window = cfg.window_size if kind == ATTN_LOCAL else 0
+    if impl == "reference":
+        return attention_reference(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                   causal=causal, window=window, cap=cap)
+    if impl == "banded":
+        return attention_banded(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                window=window, cap=cap)
+    if impl == "triangle":
+        return attention_triangle(q, k, v, q_pos=q_pos, k_pos=k_pos, cap=cap)
+    return attention_blocked(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                             causal=causal, window=window, cap=cap)
+
+
+def attn_apply(cfg: ModelConfig, p: dict, x, *, kind: str, mode: str,
+               pos0, cache: Optional[dict], causal: bool = True,
+               kv_source=None, is_cross: bool = False,
+               ) -> Tuple[jax.Array, Optional[dict]]:
+    """One attention layer.  mode: train | prefill | decode.
+
+    pos0: absolute position of x[:, 0] (python int or traced scalar).
+    kv_source: encoder output for cross attention (K/V from there, no rope).
+    is_cross: cross-attention layer (during decode K/V come from the cache).
+    """
+    is_cross = is_cross or kv_source is not None
+    if cfg.use_mla and not is_cross:
+        return _mla_apply(cfg, p, x, mode=mode, pos0=pos0, cache=cache)
+
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    cap = cfg.attn_logit_softcap
+    theta = cfg.rope_theta if kind != ATTN_LOCAL else min(cfg.rope_theta, 10_000.0)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = _maybe_shard_heads(q)
+    if is_cross and mode == "decode":          # K/V are static, from the cache
+        o = decode_attention(q, cache["k"], cache["v"], pos=jnp.asarray(2**30),
+                             cap=cap)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+        return out, cache
+    src = kv_source if is_cross else x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    k = _maybe_shard_heads(k)
+    v = _maybe_shard_heads(v)
+
+    q_pos = pos0 + jnp.arange(S)
+    if not is_cross:                           # self attention: rope q and k
+        sin, cos = rope_freqs(q_pos, hd, theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+
+    new_cache = cache
+    int8_kv = cache is not None and "k_scale" in cache
+    if mode == "decode":
+        assert S == 1
+        buf = cache["k"].shape[1]
+        slot = jnp.asarray(pos0) % buf
+        if int8_kv:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, 1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, 1),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, slot, 1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, slot, 1),
+            }
+            ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+            cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, 1)
+            new_cache = {"k": ck, "v": cv}
+        window = cfg.window_size if kind == ATTN_LOCAL else 0
+        if window and buf == window:
+            # ring buffer: recover the absolute position held in each slot;
+            # first-turn slots beyond the write head are EMPTY (would map to
+            # negative positions) and must be masked out
+            idx = jnp.arange(buf)
+            turn = jnp.asarray(pos0) // buf
+            offs = jnp.where(idx <= slot, turn * buf + idx,
+                             (turn - 1) * buf + idx)
+            offs = jnp.where(offs < 0, 2 ** 30, offs)
+        else:
+            offs = jnp.arange(buf)
+        o = decode_attention(q, ck, cv, pos=jnp.asarray(pos0), window=window,
+                             buf_offset=offs, cap=cap)
+    else:
+        if cache is not None and not is_cross:        # prefill: write cache
+            buf = cache["k"].shape[1]
+            if int8_kv and buf >= S:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                p0 = jnp.asarray(pos0)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, p0, 1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, p0, 1),
+                    "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k_scale"], ks, p0, 1),
+                    "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v_scale"], vs, p0, 1),
+                }
+            elif buf >= S:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), jnp.asarray(pos0), 1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), jnp.asarray(pos0), 1)
+            else:            # windowed ring: keep the tail in ring layout,
+                # slot(p) = p % buf, so decode's ring arithmetic lines up
+                shift = (jnp.asarray(pos0) + S) % buf
+                ck = jnp.roll(k[:, -buf:], shift, axis=1).astype(cache["k"].dtype)
+                cv = jnp.roll(v[:, -buf:], shift, axis=1).astype(cache["v"].dtype)
+            if not int8_kv:
+                new_cache = {"k": ck, "v": cv}
+        if cache is not None and is_cross:            # cross K/V: static cache
+            new_cache = {"k": k.astype(cache["k"].dtype),
+                         "v": v.astype(cache["v"].dtype)}
+        k_pos = jnp.arange(k.shape[1])
+        o = _run_attention(cfg, q, k, v, q_pos, k_pos, kind,
+                           causal and not is_cross, cap)
+
+    o = _maybe_shard_heads(o)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def _mla_apply(cfg: ModelConfig, p, x, *, mode, pos0, cache):
+    from repro.modeling.layers import rms_norm
+    B, S, D = x.shape
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    H = cfg.n_heads
+    cap = cfg.attn_logit_softcap
+    scale = (nd + rd) ** -0.5
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+                  p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    ckv = rms_norm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]   # shared head
+
+    q_pos = pos0 + jnp.arange(S)
+    sin, cos = rope_freqs(q_pos, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope, sin, cos)[:, :, 0, :]
+
+    wkv_b = p["wkv_b"].astype(x.dtype)
+    wk_b, wv_b = wkv_b[..., :nd], wkv_b[..., nd:]
+
+    if mode == "decode":
+        assert S == 1
+        c_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), jnp.asarray(pos0), 1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), jnp.asarray(pos0), 1)
+        # absorbed path: project q into latent space via wk_b [c,h,k]
+        q_lat = jnp.einsum("bshk,chk->bshc", q_nope, wk_b)
+        s = (jnp.einsum("bshc,blc->bhsl", q_lat, c_cache)
+             + jnp.einsum("bshk,blk->bhsl", q_rope, r_cache)).astype(jnp.float32) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        L = c_cache.shape[1]
+        ok = jnp.arange(L) <= jnp.asarray(pos0)
+        s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhsl,blc->bshc", pr.astype(c_cache.dtype), c_cache)
+        o = jnp.einsum("bshc,chv->bshv", o_lat, wv_b)
+        new_cache = {"ckv": c_cache, "krope": r_cache}
+    else:
+        k_nope = jnp.einsum("bsc,chk->bshk", ckv, wk_b)
+        v = jnp.einsum("bsc,chv->bshv", ckv, wv_b)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope[:, :, None, :], (*k_nope.shape[:3], rd))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        new_cache = cache
+        if cache is not None:
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), jnp.asarray(pos0), 1),
+                "krope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["krope"], k_rope.astype(cache["krope"].dtype), jnp.asarray(pos0), 1),
+            }
+        o = _run_attention(cfg, qq, k, v, q_pos, jnp.arange(S), "attn", True, cap)
+
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+    return out, new_cache

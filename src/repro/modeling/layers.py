@@ -1,0 +1,135 @@
+"""Common building blocks: ParamDef machinery, norms, FFN, RoPE, embeddings.
+
+Parameters are described structurally once (``ParamDef`` pytrees) so that
+``init_params`` (materialize random values), ``param_specs`` (PartitionSpecs)
+and ``abstract_params`` (ShapeDtypeStructs for AOT lowering) all derive from a
+single source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical sharding axis per dim
+    init: str = "normal"                 # normal | zeros | ones | embed
+    scale: float = 1.0                   # stddev multiplier (normal) / value
+    dtype: Optional[str] = None          # None -> container default
+
+    def with_leading(self, n: int) -> "ParamDef":
+        return dataclasses.replace(self, shape=(n, *self.shape),
+                                   logical=(None, *self.logical))
+
+
+jax.tree_util.register_pytree_node(  # treat ParamDef as a leaf inside pytrees
+    ParamDef, lambda p: ((), p), lambda p, _: p)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # contracting-dim heuristic: everything but the trailing (output) dim
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return int(np.prod(shape[:-1]))
+
+
+def materialize(defs, key: jax.Array, dtype) -> dict:
+    """Deterministically init every ParamDef leaf (fold_in by flattened path)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)
+
+    out = []
+    for i, (path, d) in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            v = jnp.full(d.shape, d.scale, dt)
+        else:
+            std = d.scale / np.sqrt(max(_fan_in(d.shape), 1))
+            if d.init == "embed":
+                std = d.scale
+            v = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def specs_of(defs, mesh=None):
+    """ParamDef tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda d: sharding.resolve_spec(d.logical, dims=d.shape, mesh=mesh),
+        defs, is_leaf=is_def)
+
+
+def abstract_of(defs, dtype):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape,
+                                       jnp.dtype(d.dtype) if d.dtype else dtype),
+        defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_freqs(positions, dim: int, theta: float):
+    """positions [*, S] -> (sin, cos) each [*, S, dim//2], fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, hd]; sin/cos [..., S, hd//2] broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def ffn_defs(d_model: int, d_ff: int, act: str) -> dict:
+    defs = {
+        "w_up": ParamDef((d_model, d_ff), ("fsdp", "model")),
+        "w_down": ParamDef((d_ff, d_model), ("model", "fsdp")),
+    }
+    if act == "swiglu":
+        defs["w_gate"] = ParamDef((d_model, d_ff), ("fsdp", "model"))
+    return defs
+
+
+def ffn_apply(p, x, act: str):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = sharding.shard(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

@@ -1,0 +1,126 @@
+"""Mamba (selective state-space) layer for the Jamba hybrid architecture.
+
+Train/prefill path: chunked scan over the sequence — within a chunk the
+recurrence h_t = dA_t * h_{t-1} + dB_t u_t is evaluated with an associative
+scan on [B, C, d_inner, N]; across chunks only the (state, conv-tail) carry
+survives, bounding memory.  Decode: O(1) single-step update.
+
+TP: d_inner is sharded on "model" (all ops are elementwise or contract D/din),
+so the layer needs no collectives beyond the out-projection reduce.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.modeling.layers import ParamDef
+
+CHUNK = 128
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d, din = cfg.d_model, cfg.mamba_d_inner
+    n, dtr, dc = cfg.mamba_d_state, cfg.resolved_dt_rank, cfg.mamba_d_conv
+    return {
+        "in_proj": ParamDef((d, 2 * din), ("fsdp", "model")),
+        "conv_w": ParamDef((dc, din), (None, "model")),
+        "conv_b": ParamDef((din,), ("model",), "zeros"),
+        "x_proj": ParamDef((din, dtr + 2 * n), ("model", None)),
+        "dt_proj": ParamDef((dtr, din), (None, "model")),
+        "dt_bias": ParamDef((din,), ("model",), "ones", 0.01),
+        "A_log": ParamDef((din, n), ("model", None), "ones", 0.5),
+        "D_skip": ParamDef((din,), ("model",), "ones", 1.0),
+        "out_proj": ParamDef((din, d), ("model", "fsdp")),
+    }
+
+
+def mamba_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    din, n, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "h": ParamDef((batch, din, n), ("batch", "model", None), "zeros"),
+        "conv": ParamDef((batch, dc - 1, din), ("batch", None, "model"), "zeros"),
+    }
+
+
+def _causal_conv(u, tail, w, b):
+    """u [B,C,din], tail [B,dc-1,din], w [dc,din] -> (y [B,C,din], new_tail)."""
+    dc = w.shape[0]
+    full = jnp.concatenate([tail.astype(u.dtype), u], axis=1)      # [B, C+dc-1, din]
+    y = sum(full[:, k:k + u.shape[1], :] * w[k] for k in range(dc))
+    new_tail = full[:, -(dc - 1):, :] if dc > 1 else tail
+    return y + b, new_tail
+
+
+def _ssm_chunk(p, u_c, h_prev, dtype):
+    """One chunk of the selective scan.  u_c [B,C,din] (post conv+silu)."""
+    n = p["A_log"].shape[-1]
+    dtBC = jnp.einsum("bcd,dk->bck", u_c, p["x_proj"].astype(u_c.dtype))
+    dtr = p["dt_proj"].shape[0]
+    dt_raw, B_ssm, C_ssm = jnp.split(dtBC, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bcr,rd->bcd", dt_raw, p["dt_proj"].astype(u_c.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # [din,N]
+    dA = jnp.exp(dt[..., None] * A[None, None])                    # [B,C,din,N]
+    dBu = (dt * u_c.astype(jnp.float32))[..., None] * B_ssm.astype(jnp.float32)[:, :, None, :]
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    states = a_cum * h_prev[:, None] + b_cum                       # [B,C,din,N]
+    y = jnp.einsum("bcdn,bcn->bcd", states, C_ssm.astype(jnp.float32))
+    y = y + p["D_skip"].astype(jnp.float32) * u_c.astype(jnp.float32)
+    return y.astype(dtype), states[:, -1]
+
+
+def mamba_apply(cfg: ModelConfig, p, x, *, mode: str,
+                cache: Optional[dict]) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    din = cfg.mamba_d_inner
+    uz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    uz = sharding.shard(uz, "batch", None, "model")
+    u, z = jnp.split(uz, 2, axis=-1)
+
+    if mode == "decode":
+        assert S == 1 and cache is not None
+        y_c, new_tail = _causal_conv(u, cache["conv"], p["conv_w"].astype(x.dtype),
+                                     p["conv_b"].astype(x.dtype))
+        u_c = jax.nn.silu(y_c)
+        y, h_new = _ssm_chunk(p, u_c, cache["h"].astype(jnp.float32), x.dtype)
+        new_cache = {"h": h_new.astype(cache["h"].dtype),
+                     "conv": new_tail.astype(cache["conv"].dtype)}
+    else:
+        chunk = min(CHUNK, S)
+        assert S % chunk == 0
+        nch = S // chunk
+        h0 = (cache["h"].astype(jnp.float32) if cache is not None
+              else jnp.zeros((B, din, cfg.mamba_d_state), jnp.float32))
+        tail0 = (cache["conv"].astype(x.dtype) if cache is not None
+                 else jnp.zeros((B, cfg.mamba_d_conv - 1, din), x.dtype))
+        uc = u.reshape(B, nch, chunk, din).transpose(1, 0, 2, 3)
+
+        def step(carry, u_i):
+            h, tail = carry
+            y_c, tail = _causal_conv(u_i, tail, p["conv_w"].astype(x.dtype),
+                                     p["conv_b"].astype(x.dtype))
+            u_i = jax.nn.silu(y_c)
+            y, h = _ssm_chunk(p, u_i, h, x.dtype)
+            return (h, tail), y
+
+        (h_end, tail_end), ys = jax.lax.scan(step, (h0, tail0), uc)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, din)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": h_end.astype(cache["h"].dtype),
+                         "conv": tail_end.astype(cache["conv"].dtype)}
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, new_cache

@@ -1,0 +1,379 @@
+"""Model assembly: embeddings -> scanned blocks -> head, for all families.
+
+Layer stacking uses ``jax.lax.scan`` over *pattern periods* (gemma2: [local,
+global]; gemma3: 5xlocal+global; jamba: 7xmamba+attn with MoE every 2nd layer)
+so compiled HLO size is O(period), not O(depth).  Remainder layers that do not
+fill a period are unrolled ("tail").
+
+``forward`` covers train / prefill / decode; caches are pytrees mirroring the
+block structure with a leading scan dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, MAMBA, RWKV, ModelConfig)
+from repro.distributed import sharding
+from repro.modeling import attention, mamba, moe, rwkv
+from repro.modeling.layers import (ParamDef, abstract_of, ffn_apply, ffn_defs,
+                                   materialize, rms_norm, softcap, specs_of)
+
+# ---------------------------------------------------------------------------
+# parameter structure
+# ---------------------------------------------------------------------------
+
+def _norm_def(cfg):
+    return ParamDef((cfg.d_model,), (None,), "zeros")
+
+
+def layer_defs(cfg: ModelConfig, i: int, role: str = "decoder") -> dict:
+    kind = cfg.layer_kind(i) if role == "decoder" else ATTN
+    d = {"ln1": _norm_def(cfg)}
+    if kind in (ATTN, ATTN_LOCAL):
+        d["attn"] = attention.attn_defs(cfg)
+    elif kind == MAMBA:
+        d["mamba"] = mamba.mamba_defs(cfg)
+    elif kind == RWKV:
+        d["tm"] = rwkv.rwkv_tm_defs(cfg)
+    if role == "decoder" and cfg.n_encoder_layers > 0:
+        d["ln_cross"] = _norm_def(cfg)
+        d["cross"] = attention.attn_defs(cfg, cross=True)
+    d["ln2"] = _norm_def(cfg)
+    if kind == RWKV:
+        d["cm"] = rwkv.rwkv_cm_defs(cfg)
+    elif role == "decoder" and cfg.is_moe_layer(i):
+        d["moe"] = moe.moe_defs(cfg)
+    else:
+        d["ffn"] = ffn_defs(cfg.d_model, cfg.d_ff, cfg.act)
+    if cfg.post_norm:
+        d["ln1_post"] = _norm_def(cfg)
+        d["ln2_post"] = _norm_def(cfg)
+    return d
+
+
+def block_defs(cfg: ModelConfig, role: str = "decoder") -> dict:
+    period = cfg.pattern_period if role == "decoder" else 1
+    return {f"l{j}": layer_defs(cfg, j, role) for j in range(period)}
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    defs = {
+        "embed": ParamDef((cfg.padded_vocab_size, D), ("model", "fsdp"),
+                          "embed", 0.02),
+        "final_norm": _norm_def(cfg),
+    }
+    if cfg.frontend != "none":
+        defs["frontend_proj"] = ParamDef((cfg.frontend_dim, D), (None, "fsdp"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((D, cfg.padded_vocab_size), ("fsdp", "model"))
+    nb = cfg.n_scan_blocks
+    if cfg.scan_layers and nb > 0:
+        defs["blocks"] = jax.tree.map(lambda p: p.with_leading(nb),
+                                      block_defs(cfg), is_leaf=lambda x: isinstance(x, ParamDef))
+    else:
+        defs["blocks_unrolled"] = {
+            f"b{i}": block_defs(cfg) for i in range(nb)} if nb else {}
+    defs["tail"] = {f"l{j}": layer_defs(cfg, cfg.n_scan_blocks * cfg.pattern_period + j)
+                    for j in range(cfg.n_tail_layers)}
+    if cfg.n_encoder_layers > 0:
+        defs["enc_blocks"] = jax.tree.map(
+            lambda p: p.with_leading(cfg.n_encoder_layers),
+            block_defs(cfg, role="encoder"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        defs["enc_norm"] = _norm_def(cfg)
+    return defs
+
+
+# --------------------------- caches ---------------------------------------
+
+def layer_cache_defs(cfg: ModelConfig, i: int, batch: int, max_seq: int,
+                     cross_seq: int = 0) -> dict:
+    kind = cfg.layer_kind(i)
+    d = {}
+    if kind in (ATTN, ATTN_LOCAL):
+        d["attn"] = attention.attn_cache_defs(cfg, batch, max_seq, kind)
+    elif kind == MAMBA:
+        d["mamba"] = mamba.mamba_cache_defs(cfg, batch)
+    elif kind == RWKV:
+        d["rwkv"] = rwkv.rwkv_cache_defs(cfg, batch)
+    if cross_seq:
+        d["cross"] = attention.attn_cache_defs(cfg, batch, max_seq, ATTN,
+                                               cross_seq=cross_seq)
+    return d
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_seq: int,
+               cross_seq: int = 0) -> dict:
+    period = cfg.pattern_period
+    block = {f"l{j}": layer_cache_defs(cfg, j, batch, max_seq, cross_seq)
+             for j in range(period)}
+    nb = cfg.n_scan_blocks
+    out = {}
+    if cfg.scan_layers and nb > 0:
+        out["blocks"] = jax.tree.map(lambda p: p.with_leading(nb), block,
+                                     is_leaf=lambda x: isinstance(x, ParamDef))
+    else:
+        out["blocks_unrolled"] = {f"b{i}": block for i in range(nb)}
+    out["tail"] = {f"l{j}": layer_cache_defs(
+        cfg, nb * period + j, batch, max_seq, cross_seq)
+        for j in range(cfg.n_tail_layers)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer / block application
+# ---------------------------------------------------------------------------
+
+def _residual_shard(cfg, x):
+    if cfg.seq_shard_residual:
+        return sharding.shard(x, "batch", "seq_sp", None)
+    return sharding.shard(x, "batch", None, None)
+
+
+def layer_apply(cfg: ModelConfig, i: int, p: dict, x, *, mode: str, pos0,
+                cache: Optional[dict], enc_out=None, causal: bool = True):
+    kind = cfg.layer_kind(i) if causal else ATTN
+    new_cache = dict(cache) if cache else None
+    aux = jnp.zeros((), jnp.float32)
+
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (ATTN, ATTN_LOCAL):
+        h, ac = attention.attn_apply(cfg, p["attn"], h, kind=kind, mode=mode,
+                                     pos0=pos0,
+                                     cache=cache.get("attn") if cache else None,
+                                     causal=causal)
+        if new_cache is not None and ac is not None:
+            new_cache["attn"] = ac
+    elif kind == MAMBA:
+        h, mc = mamba.mamba_apply(cfg, p["mamba"], h, mode=mode,
+                                  cache=cache.get("mamba") if cache else None)
+        if new_cache is not None and mc is not None:
+            new_cache["mamba"] = mc
+    elif kind == RWKV:
+        rc = cache.get("rwkv") if cache else None
+        h, s_new, x_carry = rwkv.rwkv_time_mix(
+            cfg, p["tm"], h,
+            cache_s=rc["s"] if rc else None,
+            cache_x=rc["x_tm"] if rc else None)
+        if new_cache is not None:
+            new_cache["rwkv"] = dict(new_cache["rwkv"])
+            new_cache["rwkv"]["s"] = s_new.astype(rc["s"].dtype)
+            new_cache["rwkv"]["x_tm"] = x_carry.astype(rc["x_tm"].dtype)
+    if cfg.post_norm:
+        h = rms_norm(h, p["ln1_post"], cfg.norm_eps)
+    x = _residual_shard(cfg, x + h)
+
+    if enc_out is not None or (cache and "cross" in cache):
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        h, cc = attention.attn_apply(
+            cfg, p["cross"], h, kind=ATTN, mode=mode, pos0=pos0,
+            cache=cache.get("cross") if cache else None,
+            causal=False, kv_source=enc_out, is_cross=True)
+        if new_cache is not None and cc is not None:
+            new_cache["cross"] = cc
+        x = _residual_shard(cfg, x + h)
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == RWKV:
+        rc = (new_cache or {}).get("rwkv") if new_cache else None
+        h, x_carry = rwkv.rwkv_channel_mix(
+            cfg, p["cm"], h, cache_x=rc["x_cm"] if rc else None)
+        if new_cache is not None:
+            new_cache["rwkv"]["x_cm"] = x_carry.astype(rc["x_cm"].dtype)
+    elif "moe" in p:
+        h, aux = moe.moe_apply(cfg, p["moe"], h, impl=cfg.moe_impl)
+    else:
+        h = ffn_apply(p["ffn"], h, cfg.act)
+    if cfg.post_norm:
+        h = rms_norm(h, p["ln2_post"], cfg.norm_eps)
+    x = _residual_shard(cfg, x + h)
+    return x, new_cache, aux
+
+
+def block_apply(cfg: ModelConfig, p: dict, x, *, mode, pos0, cache,
+                enc_out=None, causal=True, base_layer: int = 0):
+    period = len(p)
+    aux_tot = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for j in range(period):
+        lp = p[f"l{j}"]
+        lc = cache.get(f"l{j}") if cache is not None else None
+        x, nc, aux = layer_apply(cfg, base_layer + j, lp, x, mode=mode,
+                                 pos0=pos0, cache=lc, enc_out=enc_out,
+                                 causal=causal)
+        if new_cache is not None:
+            new_cache[f"l{j}"] = nc if nc is not None else {}
+        aux_tot = aux_tot + aux
+    return x, new_cache, aux_tot
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg, params, caches, x, *, mode, pos0, enc_out=None,
+               causal=True):
+    aux_tot = jnp.zeros((), jnp.float32)
+    has_cache = caches is not None
+    new_caches = {} if has_cache else None
+
+    def one_block(x, bp, bc, base):
+        return block_apply(cfg, bp, x, mode=mode, pos0=pos0, cache=bc,
+                           enc_out=enc_out, causal=causal, base_layer=base)
+
+    if "blocks" in params:
+        def body(carry, xs):
+            x, aux = carry
+            bp, bc = xs
+            x, nc, a = one_block(x, bp, bc, 0)
+            return (x, aux + a), nc
+
+        body_fn = body
+        if cfg.remat != "none" and mode == "train":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat == "full"
+                      else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            body_fn = jax.checkpoint(body, policy=policy)
+        bc = caches.get("blocks") if has_cache else None
+        if bc is None:
+            (x, aux_tot), _ = jax.lax.scan(
+                lambda c, bp: (body_fn(c, (bp, None))[0], None),
+                (x, aux_tot), params["blocks"])
+        else:
+            (x, aux_tot), new_bc = jax.lax.scan(
+                body_fn, (x, aux_tot), (params["blocks"], bc))
+            new_caches["blocks"] = new_bc
+    elif "blocks_unrolled" in params:
+        for i, (k, bp) in enumerate(sorted(params["blocks_unrolled"].items(),
+                                           key=lambda kv: int(kv[0][1:]))):
+            bc = caches["blocks_unrolled"][k] if has_cache else None
+            x, nc, a = one_block(x, bp, bc, i * cfg.pattern_period)
+            if has_cache:
+                new_caches.setdefault("blocks_unrolled", {})[k] = nc
+            aux_tot = aux_tot + a
+
+    base = cfg.n_scan_blocks * cfg.pattern_period
+    for j in range(cfg.n_tail_layers):
+        lp = params["tail"][f"l{j}"]
+        lc = caches["tail"][f"l{j}"] if has_cache else None
+        x, nc, a = layer_apply(cfg, base + j, lp, x, mode=mode, pos0=pos0,
+                               cache=lc, enc_out=enc_out, causal=causal)
+        if has_cache:
+            new_caches.setdefault("tail", {})[f"l{j}"] = nc
+        aux_tot = aux_tot + a
+    if has_cache and "tail" not in new_caches:
+        new_caches["tail"] = {}
+    return x, new_caches, aux_tot
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Encoder stack for enc-dec models. frames [B, S_enc, frontend_dim]."""
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(cfg.dtype),
+                   params["frontend_proj"].astype(cfg.dtype))
+    x = _residual_shard(cfg, x)
+
+    def body(carry, bp):
+        x, aux = carry
+        x, _, a = block_apply(cfg, bp, x, mode="train", pos0=0, cache=None,
+                              causal=False)
+        return (x, aux + a), None
+
+    body_fn = body
+    if cfg.remat != "none":     # same remat policy as the decoder stack
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, _), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                             params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    return (x * np.sqrt(cfg.d_model)).astype(cfg.dtype)
+
+
+def lm_logits(cfg, params, x):
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+def hidden_forward(cfg: ModelConfig, params, batch: dict, *,
+                   mode: str = "train", pos0=0,
+                   cache: Optional[dict] = None):
+    """Backbone up to (and including) the final norm: returns
+    (hidden [B,S,D], new_cache, aux_loss) — the head is applied separately so
+    training can use sequence-chunked cross-entropy and prefill can project
+    only the last position (§Perf: the full-vocab logits tensor dominated
+    prefill/train memory for the 256k-vocab architectures)."""
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.n_encoder_layers > 0 and mode != "decode":
+        enc_out = encode(cfg, params, batch["frontend"])
+
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.frontend != "none" and cfg.n_encoder_layers == 0 and mode != "decode":
+        pre = jnp.einsum("bsf,fd->bsd", batch["frontend"].astype(cfg.dtype),
+                         params["frontend_proj"].astype(cfg.dtype))
+        x = jnp.concatenate([pre, x], axis=1)          # vlm prefix
+    x = _residual_shard(cfg, x)
+
+    x, new_cache, aux = _run_stack(cfg, params, cache, x, mode=mode,
+                                   pos0=pos0, enc_out=enc_out)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, aux
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *, mode: str = "train",
+            pos0=0, cache: Optional[dict] = None):
+    """Returns (logits, new_cache, aux_loss).
+
+    batch keys: tokens [B,S_txt]; optional frontend [B,S_f,frontend_dim]
+    (vlm prefix or audio encoder input); enc-dec models use 'frontend' as the
+    encoder input.
+    """
+    x, new_cache, aux = hidden_forward(cfg, params, batch, mode=mode,
+                                       pos0=pos0, cache=cache)
+    if mode == "prefill":
+        x = x[:, -1:]              # only the next-token head is needed
+    logits = lm_logits(cfg, params, x)
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# init / spec helpers
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    return materialize(model_defs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def param_specs(cfg: ModelConfig, mesh=None):
+    return specs_of(model_defs(cfg), mesh=mesh)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_of(model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, cross_seq: int = 0):
+    return materialize(cache_defs(cfg, batch, max_seq, cross_seq),
+                       jax.random.PRNGKey(0), jnp.dtype(cfg.dtype))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, cross_seq: int = 0,
+                mesh=None):
+    return specs_of(cache_defs(cfg, batch, max_seq, cross_seq), mesh=mesh)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   cross_seq: int = 0):
+    return abstract_of(cache_defs(cfg, batch, max_seq, cross_seq),
+                       jnp.dtype(cfg.dtype))

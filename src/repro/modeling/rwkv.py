@@ -1,0 +1,171 @@
+"""RWKV6 ("Finch") layer: data-dependent-decay linear attention.
+
+Faithful to the RWKV6 formulation:
+  token shift  : ddlerp mixing of x_t with x_{t-1} (per-projection deltas from
+                 a small 2-layer lora over the shifted difference)
+  time mix     : per-channel data-dependent decay w_t = exp(-exp(...)),
+                 matrix-valued per-head state  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                 out_t = r_t . (diag(u) k_t v_t^T + S_{t-1}), grouped-norm'd and
+                 gated by silu(g_t)
+  channel mix  : token-shifted squared-relu FFN with sigmoid receptance gate
+
+The reference path here evaluates the recurrence with a sequential scan
+(numerically exact; O(S) steps, O(1) memory per step) — the chunked Pallas
+kernel (kernels/wkv6) is the TPU performance path and is validated against
+this implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.modeling.layers import ParamDef
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_tm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = n_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "maa_x": ParamDef((d,), (None,), "zeros"),
+        "maa_rkvwg": ParamDef((5, d), (None, None), "zeros"),
+        "maa_w1": ParamDef((d, 5 * LORA_MIX), ("fsdp", None), "normal", 0.1),
+        "maa_w2": ParamDef((5, LORA_MIX, d), (None, None, None), "normal", 0.1),
+        "decay": ParamDef((d,), (None,), "ones", -4.0),
+        "decay_w1": ParamDef((d, LORA_DECAY), ("fsdp", None), "normal", 0.1),
+        "decay_w2": ParamDef((LORA_DECAY, d), (None, None), "normal", 0.1),
+        "bonus_u": ParamDef((h, hd), ("model", None), "normal", 0.5),
+        "wr": ParamDef((d, d), ("fsdp", "model")),
+        "wk": ParamDef((d, d), ("fsdp", "model")),
+        "wv": ParamDef((d, d), ("fsdp", "model")),
+        "wg": ParamDef((d, d), ("fsdp", "model")),
+        "wo": ParamDef((d, d), ("model", "fsdp")),
+        "ln_x_scale": ParamDef((d,), (None,), "ones", 1.0),
+        "ln_x_bias": ParamDef((d,), (None,), "zeros"),
+    }
+
+
+def rwkv_cm_defs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "maa_k": ParamDef((d,), (None,), "zeros"),
+        "maa_r": ParamDef((d,), (None,), "zeros"),
+        "wk": ParamDef((d, f), ("fsdp", "model")),
+        "wv": ParamDef((f, d), ("model", "fsdp")),
+        "wr": ParamDef((d, d), ("fsdp", "model")),
+    }
+
+
+def rwkv_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    h, hd = n_heads(cfg), cfg.rwkv_head_dim
+    d = cfg.d_model
+    return {
+        "s": ParamDef((batch, h, hd, hd), ("batch", "model", None, None), "zeros"),
+        "x_tm": ParamDef((batch, d), ("batch", None), "zeros"),
+        "x_cm": ParamDef((batch, d), ("batch", None), "zeros"),
+    }
+
+
+def _shift(x, x_prev):
+    """x [B,S,D], x_prev [B,D] -> x_{t-1} sequence and the new carry."""
+    prev_seq = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return prev_seq, x[:, -1, :]
+
+
+def _group_norm(x, scale, bias, h, eps=64e-5):
+    """Per-head group norm over [B,S,D] viewed as [B,S,H,hd]."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, h, D // h).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, D) * scale + bias).astype(x.dtype)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x, *, cache_s=None, cache_x=None):
+    """Returns (out [B,S,D], new_state [B,H,hd,hd], new_x_carry [B,D])."""
+    B, S, D = x.shape
+    h, hd = n_heads(cfg), cfg.rwkv_head_dim
+    x_prev0 = cache_x if cache_x is not None else jnp.zeros((B, D), x.dtype)
+    prev, x_carry = _shift(x, x_prev0)
+    xx = prev - x
+
+    # ddlerp: data-dependent interpolation deltas for r,k,v,w,g
+    xxx = x + xx * p["maa_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", xxx, p["maa_w1"].astype(x.dtype)))
+    lora = lora.reshape(B, S, 5, LORA_MIX)
+    deltas = jnp.einsum("bsfm,fmd->bsfd", lora, p["maa_w2"].astype(x.dtype))
+    mixed = (x[:, :, None, :] + xx[:, :, None, :]
+             * (p["maa_rkvwg"].astype(x.dtype)[None, None] + deltas))
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype))
+    logw = -jnp.exp(
+        (p["decay"].astype(jnp.float32)
+         + jnp.einsum("bsm,md->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dm->bsm", xw,
+                                          p["decay_w1"].astype(x.dtype))),
+                      p["decay_w2"].astype(x.dtype)).astype(jnp.float32)))
+    w = jnp.exp(logw)                                              # [B,S,D] in (0,1)
+
+    rh = r.reshape(B, S, h, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, h, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, h, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, h, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    s0 = (cache_s.astype(jnp.float32) if cache_s is not None
+          else jnp.zeros((B, h, hd, hd), jnp.float32))
+
+    if S >= 32 and S % 16 == 0:
+        # chunked linear-attention form (mirrors the Pallas wkv6 kernel):
+        # O(S/C) scan steps instead of O(S) -> bounded backward-pass memory
+        from repro.kernels.ref import wkv6_chunked_ref
+        y, s_end = wkv6_chunked_ref(rh, kh, vh, wh, u, s0, chunk=16)
+        y = y.reshape(B, S, D)
+    else:
+        def step(s, inp):
+            r_t, k_t, v_t, w_t = inp                               # [B,h,hd]
+            kv = k_t[..., :, None] * v_t[..., None, :]             # [B,h,hd,hd]
+            out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                             s + u[None, :, :, None] * kv)
+            s = w_t[..., :, None] * s + kv
+            return s, out
+
+        xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+              vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+        s_end, outs = jax.lax.scan(step, s0, xs)
+        y = outs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    y = _group_norm(y, p["ln_x_scale"].astype(jnp.float32),
+                    p["ln_x_bias"].astype(jnp.float32), h)
+    y = (y * jax.nn.silu(g).astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return out, s_end, x_carry
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x, *, cache_x=None):
+    B, S, D = x.shape
+    x_prev0 = cache_x if cache_x is not None else jnp.zeros((B, D), x.dtype)
+    prev, x_carry = _shift(x, x_prev0)
+    xx = prev - x
+    xk = x + xx * p["maa_k"].astype(x.dtype)
+    xr = x + xx * p["maa_r"].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = sharding.shard(kk, "batch", None, "model")
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return rr * vv, x_carry

@@ -1,0 +1,53 @@
+"""Serving: prefill and single-token decode steps with explicit caches."""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.modeling import model as M
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """(params, batch, cache) -> (last-position logits [B,V], cache)."""
+    def prefill_step(params, batch, cache):
+        logits, cache, _ = M.forward(cfg, params, batch, mode="prefill",
+                                     pos0=0, cache=cache)
+        return logits[:, -1], cache   # forward already sliced to [B,1,V]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """(params, tokens [B], pos scalar, cache) -> (logits [B,V], cache).
+
+    ``pos`` is the absolute position of the incoming token (= number of
+    tokens already in the cache)."""
+    def decode_step(params, tokens, pos, cache):
+        batch = {"tokens": tokens[:, None]}
+        logits, cache, _ = M.forward(cfg, params, batch, mode="decode",
+                                     pos0=pos, cache=cache)
+        return logits[:, 0], cache
+    return decode_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int,
+                    max_seq: int, cross_seq: int = 0, frontend=None):
+    """Reference autoregressive loop (examples / tests; not the perf path)."""
+    B, S0 = prompt.shape
+    cache = M.init_cache(cfg, B, max_seq, cross_seq=cross_seq)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    batch = {"tokens": prompt}
+    if frontend is not None:
+        batch["frontend"] = frontend
+    logits, cache = prefill(params, batch, cache)
+    toks = [jnp.argmax(logits, -1)]
+    pos = S0
+    for _ in range(max_new - 1):
+        logits, cache = decode(params, toks[-1], jnp.asarray(pos, jnp.int32),
+                               cache)
+        toks.append(jnp.argmax(logits, -1))
+        pos += 1
+    return jnp.stack(toks, axis=1)

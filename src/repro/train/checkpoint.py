@@ -1,0 +1,129 @@
+"""Fault-tolerant sharded checkpointing with elastic re-shard on load.
+
+Design (no orbax offline):
+  - Each checkpoint is a directory ``step_<N>/`` holding one ``.npz`` per
+    host process with that process's shards (here: single process holds all
+    addressable shards) plus a JSON manifest (tree structure, global shapes,
+    dtypes, step).
+  - Writes are atomic: serialize to ``<dir>.tmp`` then ``os.replace``.
+  - ``restore`` takes the *target* mesh/sharding: arrays are re-laid-out on
+    load, so a job may restart on a different device count or mesh shape
+    (elastic scaling / failure recovery with shrunk capacity).
+  - ``CheckpointManager`` keeps the newest K checkpoints, finds the latest
+    valid one (torn writes are ignored), and exposes ``maybe_restore`` for
+    crash-restart training loops.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_DATA = "shards.npz"
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    """Atomic write of a full pytree (gathers addressable shards)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, _DATA), **arrays)
+    manifest = {
+        "step": int(step),
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(np.shape(x)) for x in leaves],
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "complete": True,
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)                     # atomic publish
+    return path
+
+
+def restore_checkpoint(path: str, like_tree, shardings=None):
+    """Load into the structure of ``like_tree``; if ``shardings`` (a pytree
+    of NamedSharding/None) is given, arrays are placed with that layout —
+    this is the elastic re-shard path (mesh may differ from save time)."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    if not manifest.get("complete"):
+        raise IOError(f"incomplete checkpoint at {path}")
+    data = np.load(os.path.join(path, _DATA))
+    leaves, treedef = _flatten(like_tree)
+    assert len(leaves) == manifest["n_leaves"], \
+        f"leaf count mismatch: {len(leaves)} vs {manifest['n_leaves']}"
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        want = jnp.asarray(ref).dtype if not hasattr(ref, "dtype") else ref.dtype
+        arr = arr.astype(want)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def _steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if not m:
+                continue
+            p = os.path.join(self.dir, name, _MANIFEST)
+            if os.path.exists(p):                   # torn writes lack manifest
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self._steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree) -> str:
+        path = save_checkpoint(self.dir, step, tree)
+        for old in self._steps()[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{old:08d}"),
+                          ignore_errors=True)
+        return path
+
+    def maybe_restore(self, like_tree, shardings=None):
+        """(tree, step) from the newest valid checkpoint, or (like_tree, 0)."""
+        step = self.latest_step()
+        if step is None:
+            return like_tree, 0
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            return restore_checkpoint(path, like_tree, shardings)
+        except Exception:
+            # torn/corrupt newest checkpoint: fall back to the previous one
+            steps = self._steps()[:-1]
+            if not steps:
+                return like_tree, 0
+            path = os.path.join(self.dir, f"step_{steps[-1]:08d}")
+            return restore_checkpoint(path, like_tree, shardings)

@@ -1,0 +1,140 @@
+"""Optimizers as pure pytree transforms: AdamW and Adafactor.
+
+Adafactor (factored second moment, no first moment) is the default for the
+>=100B architectures (kimi-k2 1T, jamba 398B): optimizer state is ~2 floats
+per *row/column* instead of 8 bytes per parameter, which is what makes those
+models fit 512 x 16 GB HBM (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params) -> (new_params, new_state)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (scale, norm) — the scale is applied per leaf inside the
+    update so a full fp32 copy of the gradient tree never materializes."""
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return scale, norm
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          max_grad_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        gscale, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        c = state["count"] + 1
+        b1c = 1 - b1 ** c.astype(jnp.float32)
+        b2c = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * gscale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": c}, gnorm
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0,
+              max_grad_norm: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), beta1=0."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"leaves": jax.tree.map(leaf, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        gscale, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        c = state["count"] + 1
+        beta2 = 1.0 - c.astype(jnp.float32) ** -decay_pow
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32) * gscale
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                v_hat = (vr / denom)[..., None] * vc[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v_hat = beta2 * s["v"] + (1 - beta2) * g2
+                new_s = {"v": v_hat}
+            u = g * jax.lax.rsqrt(v_hat + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["leaves"])
+
+        def upd_leaf(g, s, p):
+            # stacked-layer leaves (scan models: [n_blocks, ...]) update via
+            # lax.scan over the layer dim so the fp32 g/g^2 transients are
+            # per-layer, not whole-stack (a 1T model's expert stack would
+            # otherwise materialize ~5GB x3 fp32 temporaries per leaf)
+            if p.ndim >= 3 and p.size > 16 * 2 ** 20:
+                def body(_, xs):
+                    gi, si, pi = xs
+                    pi2, si2 = upd(gi, si, pi)
+                    return None, (pi2, si2)
+                _, (p2, s2) = jax.lax.scan(body, None, (g, s, p))
+                return p2, s2
+            return upd(g, s, p)
+
+        outs = [upd_leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_leaves = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"leaves": new_leaves, "count": c}, gnorm
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,164 @@
+"""Training step: loss, gradient accumulation, optimizer update.
+
+``make_train_step(cfg)`` builds a pure function
+    (state, batch) -> (state, metrics)
+suitable for ``jax.jit`` with sharded in/out specs.  Gradient accumulation is
+a ``lax.scan`` over microbatches (cfg.grad_accum), bounding activation memory
+for the giant architectures.  An optional gradient-compression hook (error-
+feedback int8 all-reduce, distributed/compression.py) replaces the default
+data-parallel mean.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.modeling import model as M
+from repro.train.optimizer import get_optimizer
+
+
+def cross_entropy(logits, labels):
+    """logits [B,S,V] (any float), labels [B,S] int (-1 = masked)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_cross_entropy(cfg: ModelConfig, params, hidden, labels,
+                          chunk: int) -> jax.Array:
+    """CE without materializing the full [B,S,V] logits: the head + softmax
+    run per sequence chunk under jax.checkpoint, so the peak logits buffer is
+    [B,chunk,V] (recomputed in the backward pass).  For 256k-vocab models
+    this was the dominant train-memory term (§Perf iteration 0)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:                    # fall back (smoke/odd shapes)
+        return cross_entropy(M.lm_logits(cfg, params, hidden), labels)
+    n = S // chunk
+    xc = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        x_i, lab_i = xs
+        logits = M.lm_logits(cfg, params, x_i).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lab_i, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (lab_i >= 0).astype(jnp.float32)
+        nll_sum, cnt = carry
+        return (nll_sum + ((lse - gold) * mask).sum(), cnt + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        labels = batch["labels"]
+        hidden, _, aux = M.hidden_forward(cfg, params, batch, mode="train")
+        hidden = hidden[:, -labels.shape[1]:]       # skip vlm prefix positions
+        if cfg.loss_chunk:
+            loss = chunked_cross_entropy(cfg, params, hidden, labels,
+                                         cfg.loss_chunk)
+        else:
+            loss = cross_entropy(M.lm_logits(cfg, params, hidden), labels)
+        total = loss + cfg.router_aux_coef * aux
+        return total, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def init_train_state(cfg: ModelConfig, key, opt=None):
+    params = M.init_params(cfg, key)
+    opt = opt or get_optimizer(cfg.optimizer)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, opt=None,
+                    grad_transform: Optional[Callable] = None) -> Callable:
+    """grad_transform: optional (grads) -> grads hook (e.g. compression)."""
+    opt = opt or get_optimizer(cfg.optimizer)
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        k = cfg.grad_accum
+        if k <= 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape(k, b // k, *x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def body(acc, mb):
+            (_, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + (g / k).astype(acc_dt),
+                               acc, grads)
+            return acc, metrics
+
+        grads, metrics = jax.lax.scan(body, zeros, micro)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return grads, metrics
+
+    def train_step(state, batch):
+        grads, metrics = compute_grads(state["params"], batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, gnorm = opt.update(grads, state["opt"],
+                                              state["params"])
+        metrics["grad_norm"] = gnorm
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+# --------------------------- sharding specs --------------------------------
+
+def state_specs(cfg: ModelConfig, mesh):
+    """PartitionSpec tree matching init_train_state (optimizer state mirrors
+    parameter sharding; factored adafactor rows/cols inherit leading dims)."""
+    from jax.sharding import PartitionSpec as P
+    pspecs = M.param_specs(cfg, mesh=mesh)
+
+    def opt_spec_of(ps):
+        # adamw m/v share the param spec; adafactor vr/vc drop one trailing dim
+        return ps
+
+    if cfg.optimizer == "adamw":
+        opt = {"m": pspecs, "v": pspecs, "count": P()}
+    else:
+        def leaf(ps):
+            parts = list(ps)
+            if len(parts) >= 2:
+                return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts)}
+        opt = {"leaves": jax.tree.map(leaf, pspecs,
+                                      is_leaf=lambda x: isinstance(x, P)),
+               "count": P()}
+    return {"params": pspecs, "opt": opt, "step": P()}
+
+
+def batch_specs(batch_tree, mesh):
+    """tokens/labels [B,S] -> P(('pod','data'), None); frontend likewise."""
+    def leaf(x):
+        shape = x.shape
+        return sharding.resolve_spec(
+            ("batch",) + (None,) * (len(shape) - 1), dims=shape, mesh=mesh)
+    return jax.tree.map(leaf, batch_tree)

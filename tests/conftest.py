@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the real device(s) — the 512-device dry-run flag must NOT be
+# set here (see launch/dryrun.py, which sets it before any jax import).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,118 @@
+"""Configurator properties (paper §IV) — includes hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.configurator import ClusterChoice, Configurator, \
+    confidence_margin, choose_machine_type
+from repro.core.predictor import C3OPredictor
+from repro.workloads import spark_emul as W
+
+SCALEOUTS = [2, 3, 4, 6, 8, 12, 16]
+PRICES = {m.name: m.price for m in W.MACHINES.values()}
+
+
+class _FakePredictor:
+    """Deterministic predictor: t(s) = a/s + b*s + c, known error stats."""
+
+    def __init__(self, a=1000.0, b=5.0, c=50.0, mu=0.0, sigma=10.0):
+        self.a, self.b, self.c = a, b, c
+        self.mu, self.sigma = mu, sigma
+
+    def predict(self, X):
+        s = np.asarray(X)[:, 0]
+        return self.a / s + self.b * s + self.c
+
+    def predict_with_error(self, X):
+        return self.predict(X), self.mu, self.sigma
+
+
+@settings(max_examples=50, deadline=None)
+@given(t_max=st.floats(60.0, 2000.0), c=st.floats(0.55, 0.999),
+       sigma=st.floats(0.1, 50.0))
+def test_choice_is_minimal_satisfying_scaleout(t_max, c, sigma):
+    pred = _FakePredictor(sigma=sigma)
+    conf = Configurator(pred, "m5.xlarge", PRICES, SCALEOUTS, confidence=c)
+    ctx = np.asarray([15.0])
+    choice = conf.choose_scaleout(ctx, t_max=t_max)
+    margin = confidence_margin(c, pred.mu, pred.sigma)
+    ok = [s for s in SCALEOUTS
+          if pred.predict(np.asarray([[s, 15.0]]))[0] + margin <= t_max]
+    if ok:
+        assert choice.scale_out == min(ok)
+    else:  # infeasible deadline -> fastest bound
+        bounds = {s: pred.predict(np.asarray([[s, 15.0]]))[0] + margin
+                  for s in SCALEOUTS}
+        assert choice.scale_out == min(bounds, key=bounds.get)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c1=st.floats(0.55, 0.99), c2=st.floats(0.55, 0.99))
+def test_higher_confidence_needs_no_smaller_scaleout(c1, c2):
+    lo, hi = min(c1, c2), max(c1, c2)
+    pred = _FakePredictor(sigma=25.0)
+    ctx = np.asarray([15.0])
+    t_max = 400.0
+    s_lo = Configurator(pred, "m5.xlarge", PRICES, SCALEOUTS,
+                        confidence=lo).choose_scaleout(ctx, t_max).scale_out
+    s_hi = Configurator(pred, "m5.xlarge", PRICES, SCALEOUTS,
+                        confidence=hi).choose_scaleout(ctx, t_max).scale_out
+    # more confidence -> larger margin -> scale-out can only grow
+    feasible_lo = pred.predict(np.asarray([[s_lo, 15.0]]))[0] \
+        + confidence_margin(lo, 0, 25.0) <= t_max
+    if feasible_lo:
+        assert s_hi >= s_lo
+
+
+def test_bottleneck_scaleouts_avoided():
+    pred = _FakePredictor(sigma=1.0)
+    bott = lambda ctx, s: s <= 4            # low scale-outs thrash memory
+    conf = Configurator(pred, "m5.xlarge", PRICES, SCALEOUTS,
+                        bottleneck_fn=bott)
+    choice = conf.choose_scaleout(np.asarray([15.0]), t_max=2000.0)
+    assert choice.scale_out > 4
+    # ...unless nothing else meets the deadline (paper: fall back)
+    conf2 = Configurator(_FakePredictor(a=100.0, b=200.0, sigma=0.1),
+                         "m5.xlarge", PRICES, SCALEOUTS, bottleneck_fn=bott)
+    ch2 = conf2.choose_scaleout(np.asarray([15.0]), t_max=600.0)
+    assert ch2.runtime_bound_s <= 600.0
+
+
+def test_deadline_satisfaction_rate_on_ground_truth():
+    """End-to-end §IV check: the chosen scale-out meets the deadline at
+    >= the configured confidence under the true (noisy) runtime law."""
+    d = W.generate_job_data("grep").filter_machine("m5.xlarge")
+    pred = C3OPredictor(max_cv_folds=25).fit(d.X, d.y)
+    conf = Configurator(pred, "m5.xlarge", PRICES, SCALEOUTS,
+                        confidence=0.9)
+    rng = np.random.default_rng(3)
+    hits = total = 0
+    for trial in range(40):
+        z = rng.uniform(10, 20)
+        kw = rng.choice([0.002, 0.02, 0.08])
+        ctx = np.asarray([z, kw])
+        t_max = rng.uniform(150.0, 600.0)
+        ch = conf.choose_scaleout(ctx, t_max=t_max)
+        truth = W._measure("grep", "m5.xlarge", ch.scale_out, (z, kw),
+                           seed=trial + 1000)
+        feasible = any(
+            W.true_runtime("grep", "m5.xlarge", s, (z, kw)) <= t_max
+            for s in SCALEOUTS)
+        if not feasible:
+            continue
+        total += 1
+        hits += truth <= t_max * 1.02
+    assert total >= 15
+    assert hits / total >= 0.8
+
+
+def test_machine_type_selection_prefers_cheap_effective():
+    preds = {}
+    for m in W.MACHINES:
+        d = W.generate_job_data("sort").filter_machine(m)
+        preds[m] = C3OPredictor(max_cv_folds=15).fit(d.X, d.y)
+    best = choose_machine_type(preds, PRICES, SCALEOUTS, np.asarray([15.0]))
+    assert best in W.MACHINES
+    # sort is io/cpu bound with no memory pressure: r5 (expensive memory
+    # machine) should not win
+    assert best != "r5.xlarge"

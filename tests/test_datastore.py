@@ -1,0 +1,86 @@
+"""Shared-data store: TSV codec, contribution validation (paper §III-C)."""
+import numpy as np
+import pytest
+
+from repro.core.datastore import RuntimeDataStore
+from repro.core.features import RuntimeData
+from repro.core.hub import Hub, JobRepo
+from repro.workloads import spark_emul as W
+
+
+@pytest.fixture(scope="module")
+def grep_data():
+    return W.generate_job_data("grep")
+
+
+def test_tsv_roundtrip(grep_data):
+    text = grep_data.to_tsv()
+    back = RuntimeData.from_tsv(text, grep_data.schema)
+    assert np.allclose(back.X, grep_data.X)
+    assert np.allclose(back.y, grep_data.y, rtol=1e-4)
+    assert (back.machine_type == grep_data.machine_type).all()
+
+
+def test_store_save_load(tmp_path, grep_data):
+    store = RuntimeDataStore(grep_data)
+    p = str(tmp_path / "grep.tsv")
+    store.save(p)
+    back = RuntimeDataStore.load(p, grep_data.schema)
+    assert len(back) == len(store)
+
+
+def test_contribution_validation_rejects_fabricated(grep_data):
+    store = RuntimeDataStore(grep_data)
+    n0 = len(store)
+    bad = grep_data.subset(np.arange(25))
+    bad = RuntimeData(bad.schema, bad.machine_type, bad.X,
+                      bad.y * 40.0)            # fabricated runtimes
+    rep = store.contribute(bad)
+    assert not rep.accepted
+    assert len(store) == n0
+
+
+def test_contribution_validation_accepts_honest(grep_data):
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(grep_data))
+    store = RuntimeDataStore(grep_data.subset(idx[:120]))
+    good = grep_data.subset(idx[120:150])
+    rep = store.contribute(good)
+    assert rep.accepted
+    assert len(store) == 150
+
+
+def test_hub_workflow(grep_data):
+    """Paper Fig.4: search -> download -> predict -> configure -> contribute."""
+    hub = Hub()
+    repo = JobRepo("grep", "regex scan over text", grep_data.schema,
+                   RuntimeDataStore(grep_data))
+    hub.publish(repo)
+    found = hub.search("scan")
+    assert found and found[0].job == "grep"
+    conf = repo.configurator(
+        "m5.xlarge", {m.name: m.price for m in W.MACHINES.values()},
+        [2, 3, 4, 6, 8, 12])
+    choice = conf.choose_scaleout(np.asarray([15.0, 0.02]), t_max=500.0)
+    assert choice.scale_out in [2, 3, 4, 6, 8, 12]
+    pairs = conf.runtime_cost_pairs(np.asarray([15.0, 0.02]))
+    assert len(pairs) == 6
+
+
+def test_custom_model_api(grep_data):
+    """Maintainer custom models join selection via the common API."""
+    import jax.numpy as jnp
+    from repro.core.models.api import ModelSpec
+
+    def fit(X, y, w, aux):     # a deliberately bad custom model
+        return (w * y).sum() / jnp.maximum(w.sum(), 1e-9)
+
+    def predict(params, X, aux):
+        return jnp.full(X.shape[0], params)
+
+    repo = JobRepo("grep", "grep", grep_data.schema,
+                   RuntimeDataStore(grep_data))
+    repo.add_custom_model(ModelSpec("mean_only", lambda X: {}, fit, predict))
+    pred = repo.predictor_for("m5.xlarge")
+    assert "mean_only" in pred.cv_mape
+    assert pred.selected != "mean_only"       # CV rejects the bad model

@@ -1,0 +1,49 @@
+"""C3O predictor: dynamic model selection + Gaussian error calibration."""
+import numpy as np
+import pytest
+from scipy.special import erfinv
+
+from repro.core.configurator import confidence_margin
+from repro.core.predictor import C3OPredictor, evaluate_split
+from repro.workloads import spark_emul as W
+
+
+def test_confidence_margin_closed_form():
+    # paper: c=0.95 -> t_s + mu + 1.64485 sigma
+    m = confidence_margin(0.95, 0.0, 1.0)
+    assert abs(m - 1.64485) < 1e-4
+    assert abs(confidence_margin(0.5, 0.3, 2.0) - 0.3) < 1e-9
+
+
+def test_selection_picks_good_model():
+    rng = np.random.default_rng(1)
+    s = np.tile([2, 4, 8, 16], 20).astype(float)
+    z = rng.uniform(10, 30, 80)
+    y = 20 + 5 * z / s + 12 * np.log(s)
+    p = C3OPredictor(max_cv_folds=20).fit(np.stack([s, z], 1), y)
+    assert p.selected in ("ernest", "gbm", "bom", "ogb")
+    # prediction quality close to the best constituent (paper §VI-C claim)
+    best = min(v for k, v in p.cv_mape.items())
+    assert p.cv_mape[p.selected] <= best + 1e-9
+
+
+def test_c3o_close_to_best_model_on_spark_job():
+    d = W.generate_job_data("grep").filter_machine("m5.xlarge")
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(d))
+    tr, te = idx[:40], idx[40:]
+    r = evaluate_split(("ernest", "gbm", "bom", "ogb"),
+                       d.X[tr], d.y[tr], d.X[te], d.y[te])
+    best = min(r[m] for m in ("ernest", "gbm", "bom", "ogb"))
+    # paper: C3O within ~0.5% (absolute) of the best constituent, usually
+    assert r["c3o"] <= best + 0.03
+
+
+def test_residual_calibration_quality():
+    d = W.generate_job_data("sort").filter_machine("m5.xlarge")
+    p = C3OPredictor(max_cv_folds=30).fit(d.X, d.y)
+    pred = p.predict(d.X)
+    # in-sample sanity: sigma should be of the order of observed errors
+    err = np.abs(pred - d.y)
+    assert p.sigma > 0
+    assert np.median(err) < 5 * p.sigma + 1.0

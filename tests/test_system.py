@@ -1,0 +1,61 @@
+"""End-to-end behaviour tests: the paper's full workflow (Fig. 4) and the
+C3O-for-TPU integration."""
+import numpy as np
+import pytest
+
+from repro.core import (C3OPredictor, Configurator, Hub, JobRepo,
+                        RuntimeDataStore)
+from repro.workloads import spark_emul as W
+
+
+def test_paper_workflow_end_to_end():
+    """(1) find job on hub -> (2) download data -> (3,4) inputs ->
+    (5) configure cluster -> (6) contribute new runtime data."""
+    hub = Hub()
+    for job in ("sort", "grep"):
+        data = W.generate_job_data(job)
+        hub.publish(JobRepo(job, f"spark {job}", data.schema,
+                            RuntimeDataStore(data)))
+    repo = hub.search("grep")[0]
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    conf = repo.configurator("m5.xlarge", prices, [2, 3, 4, 6, 8, 12])
+
+    ctx = np.asarray([18.0, 0.02])         # 18 GB, 2% keyword hits
+    choice = conf.choose_scaleout(ctx, t_max=420.0)
+    assert choice.runtime_bound_s <= 420.0
+    truth = W.true_runtime("grep", "m5.xlarge", choice.scale_out,
+                           (18.0, 0.02))
+    assert truth <= 420.0 * 1.05           # deadline actually met
+
+    # (6) the user's run flows back into the shared store
+    from repro.core.features import RuntimeData
+    new = RuntimeData(repo.schema, np.asarray(["m5.xlarge"]),
+                      np.asarray([[choice.scale_out, 18.0, 0.02]]),
+                      np.asarray([truth]))
+    rep = repo.contribute(new)
+    assert rep.accepted
+
+
+@pytest.mark.slow
+def test_autoconfig_tpu_integration():
+    from repro.launch.autoconfig import autoconfigure
+    choice, pred = autoconfigure("gemma3-1b", "train_4k",
+                                 step_budget_s=None,
+                                 chip_counts=(64, 128, 256))
+    assert choice.scale_out in (64, 128, 256)
+    assert pred.selected is not None
+    # a tight step budget forces a bigger slice than a loose one allows
+    fast, _ = autoconfigure("gemma3-1b", "train_4k", step_budget_s=0.05,
+                            chip_counts=(64, 128, 256))
+    slow, _ = autoconfigure("gemma3-1b", "train_4k", step_budget_s=10.0,
+                            chip_counts=(64, 128, 256))
+    assert fast.scale_out >= slow.scale_out
+
+
+@pytest.mark.slow
+def test_autoconfig_memory_bottleneck():
+    """kimi-k2 (1T params) cannot fit 64 v5e chips: bottleneck exclusion."""
+    from repro.launch.autoconfig import autoconfigure
+    choice, _ = autoconfigure("kimi-k2-1t-a32b", "train_4k",
+                              chip_counts=(64, 128, 256, 512))
+    assert choice.scale_out >= 256

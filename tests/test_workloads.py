@@ -1,0 +1,53 @@
+"""Workload emulator: Table I structure + runtime-law sanity."""
+import numpy as np
+import pytest
+
+from repro.workloads import spark_emul as W
+
+EXPECTED = {"sort": (126, 2), "grep": (162, 3), "sgd": (180, 4),
+            "kmeans": (180, 4), "pagerank": (282, 4)}
+
+
+def test_table1_structure():
+    total = 0
+    for job, (n, nfeat) in EXPECTED.items():
+        d = W.generate_job_data(job)
+        assert len(d) == n, f"{job}: {len(d)} != {n}"
+        assert d.X.shape[1] == nfeat
+        total += len(d)
+    assert total == 930                          # the paper's 930 jobs
+
+
+def test_runtimes_positive_and_decreasing_in_scaleout():
+    for job in EXPECTED:
+        d = W.generate_job_data(job)
+        assert (d.y > 0).all()
+    # noise-free law: more nodes never catastrophically slower for sort
+    t = [W.true_runtime("sort", "m5.xlarge", s, (15.0,)) for s in (2, 4, 8)]
+    assert t[0] > t[1] > t[2]
+
+
+def test_memory_cliff():
+    """Iterative jobs fall off a cliff when the dataset misses memory
+    (paper §IV-B: insufficient scale-out -> disk thrashing)."""
+    small = W.true_runtime("sgd", "c5.xlarge", 8, (30.0, 50, 100))
+    tiny = W.true_runtime("sgd", "c5.xlarge", 2, (30.0, 50, 100))
+    # 2 nodes x 8GB cannot hold 30GB*2.3 -> penalized beyond the 4x scaleup
+    assert tiny > small * 4.0
+
+
+def test_context_groups_are_local_datasets():
+    d = W.generate_job_data("kmeans")
+    groups = W.context_groups(d)
+    # 10 sampled (size, k, dim) cells collapse to the unique (k, dim) pairs
+    assert 2 <= len(groups) <= 10
+    assert sum(len(g) for g in groups) == len(d)
+    assert all(len(g) >= 6 for g in groups)
+
+
+def test_measurement_median_controls_stragglers():
+    vals = [W._measure("sort", "m5.xlarge", 4, (15.0,), seed=s)
+            for s in range(30)]
+    base = W.true_runtime("sort", "m5.xlarge", 4, (15.0,))
+    # medians sit near the true law despite straggler injection
+    assert np.median(vals) < base * 1.15
