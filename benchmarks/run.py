@@ -3,6 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time per
 inner evaluation where meaningful; derived = headline metric).
 
+  engine        fused prediction engine: fit throughput (cold vs warm
+                executable cache), candidate-grid scoring predictions/sec on
+                a 3-machine x 7-scale-out x 256-context grid, and speedup
+                over the seed per-row/fresh-jit path
   table1        dataset structure vs paper Table I
   table2        MAPE local/global x 5 jobs x {ernest,gbm,bom,ogb,c3o} (§VI-C.a)
   fig5          MAPE vs training-set size (§VI-C.b)
@@ -29,6 +33,76 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_engine(args):
+    import jax
+
+    from repro.core import engine
+    from repro.core.configurator import Configurator
+    from repro.core.predictor import C3OPredictor
+    from repro.workloads import spark_emul as W
+
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    machines = sorted(W.MACHINES)[:3]
+    scaleouts = [2, 3, 4, 6, 8, 12, 16]
+    rng = np.random.default_rng(0)
+    contexts = np.stack([rng.uniform(10, 20, 256),
+                         rng.choice([.002, .02, .08], 256)], axis=1)
+    data = {m: W.generate_job_data("grep").filter_machine(m)
+            for m in machines}
+
+    # --- fit throughput: cold (trace+compile) vs warm executable cache ----
+    t0 = time.time()
+    preds = {m: C3OPredictor(max_cv_folds=25).fit(d.X, d.y)
+             for m, d in data.items()}
+    cold = (time.time() - t0) / len(machines)
+    t0 = time.time()
+    preds = {m: C3OPredictor(max_cv_folds=25).fit(d.X, d.y)
+             for m, d in data.items()}
+    warm = (time.time() - t0) / len(machines)
+    _row("engine.fit_cold", cold * 1e6, "fit+select, per machine type")
+    _row("engine.fit_warm", warm * 1e6,
+         f"cached executables, speedup={cold / max(warm, 1e-9):.1f}x")
+
+    # --- warm candidate-grid scoring: machines x scale-outs x contexts ----
+    n_cand = len(machines) * len(scaleouts) * len(contexts)
+    engine.machine_grid_costs(preds, prices, scaleouts, contexts)  # warm-up
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        names, t, cost = engine.machine_grid_costs(preds, prices, scaleouts,
+                                                   contexts)
+    grid_s = (time.time() - t0) / reps
+    _row("engine.grid_score", grid_s / n_cand * 1e6,
+         f"candidates/s={n_cand / grid_s:.0f} grid={len(machines)}x"
+         f"{len(scaleouts)}x{len(contexts)}")
+
+    # --- choose_batch serving throughput -----------------------------------
+    conf = Configurator(preds[machines[0]], machines[0], prices, scaleouts)
+    conf.choose_batch(contexts, t_max=400.0)                       # warm-up
+    t0 = time.time()
+    for _ in range(reps):
+        conf.choose_batch(contexts, t_max=400.0)
+    batch_s = (time.time() - t0) / reps
+    _row("engine.choose_batch", batch_s / len(contexts) * 1e6,
+         f"choices/s={len(contexts) / batch_s:.0f}")
+
+    # --- seed per-row path: fresh jax.jit per predict call, one context at
+    # a time (the pre-engine FittedModel behavior), measured on a subset ---
+    fm = preds[machines[0]]._fitted
+    n_sub = 8
+    t0 = time.time()
+    for ctx in contexts[:n_sub]:
+        rows = np.stack([np.concatenate([[s], ctx]) for s in scaleouts])
+        import jax.numpy as jnp
+        np.asarray(jax.jit(fm.spec.predict)(
+            fm.params, jnp.asarray(rows, jnp.float32), fm.aux))
+    naive_per_ctx = (time.time() - t0) / n_sub
+    warm_per_ctx = batch_s / len(contexts)
+    _row("engine.seed_per_row_path", naive_per_ctx * 1e6,
+         f"speedup_warm_vs_seed={naive_per_ctx / max(warm_per_ctx, 1e-12):.1f}x"
+         " (target >=5x)")
 
 
 def bench_table1(args):
@@ -202,6 +276,7 @@ def bench_roofline(args):
 
 
 BENCHES = {
+    "engine": bench_engine,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig5": bench_fig5,

@@ -10,15 +10,23 @@ cross-validation residuals.  Configurations with an expected hardware
 bottleneck (dataset missing cluster memory) are excluded unless nothing else
 satisfies the deadline (paper §IV-B).  When no deadline is given, the user is
 handed (scale-out, runtime, cost) pairs to choose from.
+
+Candidate scoring goes through the prediction engine (repro.core.engine):
+the whole (scale-out x context-batch) grid is evaluated in one predictor
+call and choices are selected with vectorized numpy — ``choose_batch``
+serves many contexts per dispatch, and ``choose_scaleout`` is its
+single-context special case (choice-for-choice identical to the scalar
+reference semantics).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 from scipy.special import erfinv
 
+from repro.core import engine
 from repro.core.predictor import C3OPredictor
 
 
@@ -48,20 +56,62 @@ class Configurator:
     # working set misses cluster memory at this scale-out
     bottleneck_fn: Optional[Callable[[np.ndarray, int], bool]] = None
 
-    def _choices(self, context_row: np.ndarray) -> List[ClusterChoice]:
-        rows = np.stack([np.concatenate([[s], context_row])
-                         for s in self.scaleouts])
-        t, mu, sigma = self.predictor.predict_with_error(rows)
+    # ------------------------- grid scoring -------------------------------
+    def _score(self, contexts: np.ndarray):
+        """(t, bound, cost, bottleneck) arrays, each [C, S]."""
+        contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+        t, mu, sigma = engine.score_grid(self.predictor, self.scaleouts,
+                                         contexts)
         margin = confidence_margin(self.confidence, mu, sigma)
-        price = self.prices[self.machine_type]
-        out = []
-        for s, ts in zip(self.scaleouts, t):
-            bott = bool(self.bottleneck_fn(context_row, int(s))) \
-                if self.bottleneck_fn else False
-            out.append(ClusterChoice(
-                self.machine_type, int(s), float(ts), float(ts + margin),
-                float(price * (ts / 3600.0) * s), bott))
-        return out
+        S = np.asarray(self.scaleouts, np.float64)
+        bound = t + margin
+        cost = self.prices[self.machine_type] * (t / 3600.0) * S[None, :]
+        if self.bottleneck_fn is not None:
+            bott = np.array([[bool(self.bottleneck_fn(ctx, int(s)))
+                              for s in self.scaleouts] for ctx in contexts])
+        else:
+            bott = np.zeros(t.shape, bool)
+        return t, bound, cost, bott
+
+    def _choices(self, context_row: np.ndarray) -> List[ClusterChoice]:
+        t, bound, cost, bott = self._score(context_row)
+        return [ClusterChoice(self.machine_type, int(s), float(t[0, j]),
+                              float(bound[0, j]), float(cost[0, j]),
+                              bool(bott[0, j]))
+                for j, s in enumerate(self.scaleouts)]
+
+    # ------------------------- choice selection ---------------------------
+    def choose_batch(self, contexts: np.ndarray,
+                     t_max: Union[None, float, np.ndarray] = None
+                     ) -> List[ClusterChoice]:
+        """Per-context choices for a whole context batch in one dispatch.
+
+        Selection semantics match ``choose_scaleout`` choice-for-choice:
+        smallest clean scale-out meeting the deadline with confidence c,
+        falling back to bottlenecked options, then to the fastest bound;
+        without a deadline, the cheapest clean (else cheapest any) choice.
+        ``t_max`` may be a scalar (shared deadline) or a [C] array.
+        """
+        contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+        t, bound, cost, bott = self._score(contexts)
+        C = len(contexts)
+        S = np.asarray(self.scaleouts, np.float64)[None, :]
+        if t_max is None:
+            clean_cost = np.where(bott, np.inf, cost)
+            has_clean = np.isfinite(clean_cost).any(1)
+            idx = np.where(has_clean, clean_cost.argmin(1), cost.argmin(1))
+        else:
+            tm = np.broadcast_to(np.asarray(t_max, np.float64), (C,))
+            ok_any = bound <= tm[:, None]
+            ok_clean = ok_any & ~bott
+            idx = np.where(
+                ok_clean.any(1), np.where(ok_clean, S, np.inf).argmin(1),
+                np.where(ok_any.any(1), np.where(ok_any, S, np.inf).argmin(1),
+                         bound.argmin(1)))
+        return [ClusterChoice(self.machine_type, int(self.scaleouts[j]),
+                              float(t[c, j]), float(bound[c, j]),
+                              float(cost[c, j]), bool(bott[c, j]))
+                for c, j in enumerate(idx)]
 
     def choose_scaleout(self, context_row: np.ndarray,
                         t_max: Optional[float] = None) -> ClusterChoice:
@@ -69,19 +119,7 @@ class Configurator:
 
         Bottlenecked scale-outs are skipped unless no clean option meets the
         deadline; without a deadline, returns the cheapest clean choice."""
-        choices = self._choices(context_row)
-        clean = [c for c in choices if not c.bottleneck]
-        if t_max is None:
-            pool = clean or choices
-            return min(pool, key=lambda c: c.cost_usd)
-        ok_clean = [c for c in clean if c.runtime_bound_s <= t_max]
-        if ok_clean:
-            return min(ok_clean, key=lambda c: c.scale_out)
-        ok_any = [c for c in choices if c.runtime_bound_s <= t_max]
-        if ok_any:
-            return min(ok_any, key=lambda c: c.scale_out)
-        # nothing meets the deadline: return the fastest bound
-        return min(choices, key=lambda c: c.runtime_bound_s)
+        return self.choose_batch(np.atleast_2d(context_row), t_max)[0]
 
     def runtime_cost_pairs(self, context_row: np.ndarray
                            ) -> List[Tuple[int, float, float]]:
@@ -95,13 +133,11 @@ def choose_machine_type(predictors: Dict[str, C3OPredictor],
                         scaleouts: Sequence[int],
                         context_row: np.ndarray) -> str:
     """Fallback machine-type selection (paper §IV-A): cheapest expected cost
-    at each machine's best scale-out, using per-machine-type predictors."""
-    best_m, best_cost = None, np.inf
-    for m, pred in predictors.items():
-        rows = np.stack([np.concatenate([[s], context_row])
-                         for s in scaleouts])
-        t = pred.predict(rows)
-        cost = np.min(prices[m] * (t / 3600.0) * np.asarray(scaleouts))
-        if cost < best_cost:
-            best_m, best_cost = m, float(cost)
-    return best_m
+    at each machine's best scale-out, using per-machine-type predictors.
+
+    The full (machine x scale-out) grid is dispatched through the engine
+    before the first host sync (one batched predict per machine)."""
+    names, _t, cost = engine.machine_grid_costs(predictors, prices,
+                                                scaleouts, context_row)
+    best = cost[:, 0, :].min(axis=1)            # [M] cheapest per machine
+    return names[int(best.argmin())]            # ties: first in dict order

@@ -36,9 +36,17 @@ class RuntimeDataStore:
         self.reject_ratio = reject_ratio
         self.reject_slack = reject_slack
         self.seed = seed
+        self._version = 0
 
     def __len__(self):
         return len(self.data)
+
+    @property
+    def version(self) -> int:
+        """Monotonic data version: bumps only when a contribution is
+        accepted, so downstream fit caches (JobRepo.predictor_for) refit
+        exactly when the data actually changed."""
+        return self._version
 
     # ----------------------- persistence ---------------------------------
     def save(self, path: str) -> None:
@@ -90,4 +98,5 @@ class RuntimeDataStore:
         report = self.validate(contribution)
         if report.accepted:
             self.data = self.data.concat(contribution)
+            self._version += 1
         return report

@@ -1,0 +1,258 @@
+"""Fused prediction engine: the single compiled entry point for fit, model
+selection (LOO-CV), and candidate-grid scoring.
+
+DESIGN
+======
+The C3O compute hot-spot is evaluating the runtime predictor over every
+candidate configuration (machine types x scale-outs x contexts) and
+re-predicting during leave-one-out model selection (paper §IV-§VI).  The seed
+implementation paid three avoidable costs on that path:
+
+  1. retracing — ``jax.jit(spec.fit)`` / ``jax.jit(spec.predict)`` built a
+     *fresh* jit wrapper (with an empty executable cache) on every
+     ``FittedModel`` construction and every ``predict`` call;
+  2. host round-trips — model selection pulled each model's fold predictions
+     to the host before the next model was even dispatched, serializing the
+     device pipeline and computing MAPE/residual statistics in numpy;
+  3. per-row Python loops — the configurator scored candidates one context at
+     a time, and machine-type selection re-built the scale-out grid per
+     machine.
+
+This module removes all three.  Everything routes through process-wide
+executable caches:
+
+Cache keys
+----------
+``fit_executable(spec)`` / ``predict_executable(spec)`` / ``cv_executable(spec)``
+    LRU-cached per ``ModelSpec`` (frozen dataclass: equality is
+    (name, make_aux, fit, predict) identity).  Each cached wrapper is a
+    single ``jax.jit`` object, so XLA keeps **one executable per
+    (ModelSpec, input shape/dtype)** — repeated fits/predicts on the same
+    data shape never retrace, across any number of ``FittedModel`` or
+    ``C3OPredictor`` instances.
+
+``_gbm_kernel_executable(interpret)``
+    The Pallas boosted-ensemble inference kernel
+    (``repro.kernels.gbm_predict``) jitted once per interpret mode.  Batched
+    predictions of GBM-selected predictors route through it on TPU backends
+    (``C3O_GBM_KERNEL=auto``, the default); set ``on``/``interpret``/``off``
+    to force the kernel, the interpreted kernel (CPU correctness path), or
+    the jnp scan fallback.
+
+``JobRepo.predictor_for`` (see ``repro.core.hub``)
+    fitted predictors cached per
+    ``(machine_type, seed, datastore version, model list)`` — ``contribute``
+    bumps the datastore version only when data is actually accepted, so hub
+    traffic triggers a refit only when the data changed.
+
+Fused multi-model CV
+--------------------
+``cv_select`` builds the fold-weight matrix ``W = 1 - onehot(folds)`` once,
+dispatches every model's vmapped LOO refit+predict **and** its on-device
+MAPE/residual reduction back-to-back (no host sync between models), then
+performs a single host pull at the end.  The device pipeline therefore
+overlaps model k's compute with model k+1's dispatch.
+
+Grid-scored configuration
+-------------------------
+``score_grid`` evaluates a (scale-out x context-batch) grid in one predictor
+call; ``machine_grid_costs`` stacks that over machine types, dispatching all
+machines before the first sync.  ``Configurator.choose_batch`` turns the
+scored grid into per-context choices with vectorized numpy selection —
+semantics identical, choice-for-choice, to the scalar ``choose_scaleout``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.models.api import ModelSpec
+
+# --------------------------------------------------------------------------
+# Executable caches (one jit wrapper per ModelSpec; XLA then caches one
+# executable per input shape under each wrapper).
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def fit_executable(spec: ModelSpec):
+    """Cached jitted ``spec.fit``: (X, y, w, aux) -> params."""
+    return jax.jit(spec.fit)
+
+
+@functools.lru_cache(maxsize=None)
+def predict_executable(spec: ModelSpec):
+    """Cached jitted ``spec.predict``: (params, X, aux) -> yhat."""
+    return jax.jit(spec.predict)
+
+
+@functools.lru_cache(maxsize=None)
+def cv_executable(spec: ModelSpec):
+    """Cached jitted fused LOO-CV for one model.
+
+    (X, y, W, fold_idx, aux) -> (mape, resid_mu, resid_sigma, preds); all
+    folds are one vmapped weighted refit and the MAPE/residual reductions
+    happen on-device, so selection needs a single scalar pull per model.
+    """
+
+    def _cv(X, y, W, fold_idx, aux):
+        def one_fold(w, i):
+            params = spec.fit(X, y, w, aux)
+            return spec.predict(params, X[i][None, :], aux)[0]
+
+        pred = jax.vmap(one_fold)(W, fold_idx)
+        pred = jnp.nan_to_num(pred, nan=1e12, posinf=1e12, neginf=-1e12)
+        y_f = y[fold_idx]
+        ape = jnp.abs(pred - y_f) / jnp.maximum(jnp.abs(y_f), 1e-9)
+        resid = pred - y_f
+        return ape.mean(), resid.mean(), resid.std(), pred
+
+    return jax.jit(_cv)
+
+
+def cache_stats() -> Dict[str, int]:
+    """Executable-cache occupancy (introspection for tests/benchmarks)."""
+    return {"fit": fit_executable.cache_info().currsize,
+            "predict": predict_executable.cache_info().currsize,
+            "cv": cv_executable.cache_info().currsize}
+
+
+# --------------------------------------------------------------------------
+# Prediction dispatch (with Pallas GBM ensemble routing)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=2)
+def _gbm_kernel_executable(interpret: bool):
+    from repro.kernels.gbm_predict import gbm_predict as pallas_gbm
+
+    def run(X, feat, thr, leaf, f0, y_scale):
+        raw = pallas_gbm(X, feat, thr, leaf, f0, 1.0, interpret=interpret)
+        # same normalization contract as models.gbm.gbm_predict: y_scale==0
+        # is the log-target sentinel
+        return jnp.where(y_scale == 0.0,
+                         jnp.exp(jnp.clip(raw, -30.0, 30.0)),
+                         raw * jnp.maximum(y_scale, 1e-12))
+
+    return jax.jit(run)
+
+
+def _gbm_kernel_mode() -> str:
+    mode = os.environ.get("C3O_GBM_KERNEL", "auto").lower()
+    if mode == "auto":
+        return "on" if jax.default_backend() == "tpu" else "off"
+    return mode
+
+
+def predict(spec: ModelSpec, params, X, aux) -> jnp.ndarray:
+    """Batched prediction through the cached executable for ``spec``.
+
+    GBM predictors route through the Pallas ensemble kernel when enabled
+    (TPU backend, or ``C3O_GBM_KERNEL`` in {on, interpret}); everything else
+    (and the CPU default) uses the cached jnp executable.
+    """
+    Xj = jnp.asarray(X, jnp.float32)
+    from repro.core.models.gbm import GBM_SPEC
+    if spec is GBM_SPEC:        # identity, not name: a maintainer model
+        mode = _gbm_kernel_mode()   # re-registered as "gbm" has foreign params
+        if mode in ("on", "interpret"):
+            return _gbm_kernel_executable(mode == "interpret")(
+                Xj, params.feat, params.thr, params.leaf, params.f0,
+                params.y_scale)
+    return predict_executable(spec)(params, Xj, aux)
+
+
+# --------------------------------------------------------------------------
+# Fused multi-model cross-validation / selection
+# --------------------------------------------------------------------------
+
+def cv_select(specs: Sequence[ModelSpec], X: np.ndarray, y: np.ndarray,
+              folds: np.ndarray
+              ) -> Tuple[str, Dict[str, float], float, float]:
+    """LOO-CV every model in one pipelined batch; returns
+    (selected name, {name: mape}, resid mu, resid sigma of the selected).
+
+    All models are dispatched before any host synchronization: the shared
+    fold-weight matrix lives on device once, and each model's executable
+    reduces MAPE/residual statistics on-device, so the only host traffic is
+    four scalars per model at the end.
+    """
+    X64 = np.asarray(X, np.float64)
+    Xj = jnp.asarray(X64, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    fold_j = jnp.asarray(np.asarray(folds))
+    W = 1.0 - jax.nn.one_hot(fold_j, len(y))               # [F, n] shared
+    pending = []
+    for spec in specs:
+        aux = spec.make_aux(X64)
+        pending.append((spec.name,
+                        cv_executable(spec)(Xj, yj, W, fold_j, aux)))
+    mapes: Dict[str, float] = {}
+    stats: Dict[str, Tuple[float, float]] = {}
+    for name, (mape, mu, sigma, _pred) in pending:          # single sync pass
+        mapes[name] = float(mape)
+        stats[name] = (float(mu), float(sigma))
+    best = min(mapes, key=mapes.get)        # ties: first in model order
+    mu, sigma = stats[best]
+    return best, mapes, mu, sigma + 1e-12
+
+
+# --------------------------------------------------------------------------
+# Grid-scored configuration
+# --------------------------------------------------------------------------
+
+def grid_rows(scaleouts: Sequence[int], contexts: np.ndarray) -> np.ndarray:
+    """[S*C, 1+k] feature rows for the (scale-out x context) grid,
+    scale-out-major (row s*C + c pairs scaleouts[s] with contexts[c])."""
+    contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+    S = np.asarray(scaleouts, np.float64)
+    C, k = contexts.shape
+    rows = np.empty((len(S), C, k + 1), np.float64)
+    rows[..., 0] = S[:, None]
+    rows[..., 1:] = contexts[None, :, :]
+    return rows.reshape(-1, k + 1)
+
+
+def _predict_rows(predictor, rows: np.ndarray):
+    """Prefer the device-level (non-syncing) predict when available so
+    multi-predictor sweeps pipeline their dispatches."""
+    dev = getattr(predictor, "predict_device", None)
+    return dev(rows) if dev is not None else predictor.predict(rows)
+
+
+def score_grid(predictor, scaleouts: Sequence[int], contexts: np.ndarray
+               ) -> Tuple[np.ndarray, float, float]:
+    """Runtime predictions for the whole (scale-out x context) grid in ONE
+    predictor call: -> (t [C, S], mu, sigma)."""
+    contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+    rows = grid_rows(scaleouts, contexts)
+    t, mu, sigma = predictor.predict_with_error(rows)
+    t = np.asarray(t, np.float64).reshape(len(scaleouts), len(contexts)).T
+    return t, mu, sigma
+
+
+def machine_grid_costs(predictors: Dict[str, object],
+                       prices: Dict[str, float],
+                       scaleouts: Sequence[int],
+                       contexts: np.ndarray
+                       ) -> Tuple[List[str], np.ndarray, np.ndarray]:
+    """Score the full (machine x scale-out x context) grid.
+
+    Dispatches every machine's grid prediction before the first host sync;
+    returns (machine names, t [M, C, S], cost [M, C, S])."""
+    contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+    rows = grid_rows(scaleouts, contexts)
+    S = np.asarray(scaleouts, np.float64)
+    names, pending = [], []
+    for m, pred in predictors.items():
+        names.append(m)
+        pending.append(_predict_rows(pred, rows))           # async dispatch
+    t = np.stack([np.asarray(p, np.float64)
+                  .reshape(len(S), len(contexts)).T for p in pending])
+    cost = np.stack([prices[m] for m in names])[:, None, None] \
+        * (t / 3600.0) * S[None, None, :]
+    return names, t, cost

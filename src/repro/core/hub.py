@@ -29,6 +29,12 @@ class JobRepo:
     store: RuntimeDataStore
     model_names: List[str] = field(default_factory=lambda: list(DEFAULT_MODELS))
     maintainer_machine_type: Optional[str] = None   # paper §IV-A
+    # fitted-predictor cache, keyed on everything the fit depends on:
+    # (machine_type, seed, datastore version, model list).  ``contribute``
+    # bumps the store version only when data is accepted, so hub traffic
+    # triggers a refit exactly when the data changed.
+    _fit_cache: Dict[tuple, C3OPredictor] = field(default_factory=dict,
+                                                  repr=False, compare=False)
 
     def add_custom_model(self, spec: ModelSpec) -> None:
         """Maintainers ship job-specific models behind the common API
@@ -38,9 +44,21 @@ class JobRepo:
             self.model_names.append(spec.name)
 
     def predictor_for(self, machine_type: str, seed: int = 0) -> C3OPredictor:
-        d = self.store.data.filter_machine(machine_type)
-        return C3OPredictor(model_names=tuple(self.model_names),
-                            seed=seed).fit(d.X, d.y)
+        from repro.core.models.api import get_model
+        # key on the spec OBJECTS, not names: re-registering a custom model
+        # under an existing name must invalidate the cached fit
+        key = (machine_type, seed, self.store.version,
+               tuple(get_model(n) for n in self.model_names))
+        pred = self._fit_cache.get(key)
+        if pred is None:
+            d = self.store.data.filter_machine(machine_type)
+            pred = C3OPredictor(model_names=tuple(self.model_names),
+                                seed=seed).fit(d.X, d.y)
+            # stale versions can never be requested again: evict them
+            self._fit_cache = {k: v for k, v in self._fit_cache.items()
+                               if k[2] == self.store.version}
+            self._fit_cache[key] = pred
+        return pred
 
     def configurator(self, machine_type: str, prices: Dict[str, float],
                      scaleouts: Sequence[int], **kw) -> Configurator:

@@ -51,20 +51,30 @@ def model_names():
 
 
 class FittedModel:
-    """Object wrapper for single-fit use (configurator, examples)."""
+    """Object wrapper for single-fit use (configurator, examples).
+
+    Fit and predict go through the engine's process-wide executable caches
+    (repro.core.engine): constructing many FittedModels for the same spec
+    and data shape reuses one compiled executable instead of retracing.
+    """
 
     def __init__(self, spec: ModelSpec, X: np.ndarray, y: np.ndarray,
                  w: Optional[np.ndarray] = None):
+        from repro.core import engine      # local import: engine imports us
         X = np.asarray(X, np.float64)
         self.spec = spec
         self.aux = spec.make_aux(X)
         w = np.ones(len(y)) if w is None else w
-        self.params = jax.jit(spec.fit)(
+        self.params = engine.fit_executable(spec)(
             jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32),
             jnp.asarray(w, jnp.float32), self.aux)
         self.name = spec.name
 
+    def predict_device(self, X) -> jax.Array:
+        """Device-resident prediction (no host sync) — lets grid sweeps
+        pipeline many dispatches before pulling results."""
+        from repro.core import engine
+        return engine.predict(self.spec, self.params, X, self.aux)
+
     def predict(self, X) -> np.ndarray:
-        out = jax.jit(self.spec.predict)(
-            self.params, jnp.asarray(X, jnp.float32), self.aux)
-        return np.asarray(out, np.float64)
+        return np.asarray(self.predict_device(X), np.float64)

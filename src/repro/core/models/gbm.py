@@ -154,4 +154,6 @@ def _predict(params, X, aux):
     return gbm_predict(params, X)
 
 
-register_model(ModelSpec("gbm", _make_aux, _fit, _predict))
+# canonical spec object: the engine routes Pallas-kernel inference on spec
+# identity (a re-registered "gbm" with different params must not match)
+GBM_SPEC = register_model(ModelSpec("gbm", _make_aux, _fit, _predict))

@@ -6,44 +6,23 @@ phase must be bounded as data grows) and the lowest-MAPE model is selected.
 The CV residuals of the selected model calibrate the Gaussian error model
 (mu, sigma) the configurator's confidence formula consumes (paper §IV-B).
 
-All folds of one model are evaluated as a single vmapped, jitted computation.
+All models' folds dispatch as one pipelined batch through the prediction
+engine (repro.core.engine): the fold-weight matrix is built once, every
+model's vmapped refit + on-device MAPE/residual reduction is enqueued
+back-to-back, and the host synchronizes a single time at the end.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core.models.api import get_model
 
 DEFAULT_MODELS = ("ernest", "gbm", "bom", "ogb")
-
-
-@functools.lru_cache(maxsize=None)
-def _cv_fn(spec):
-    """Batched LOO-CV executable per model spec (stable identity -> one jit
-    cache entry per data shape, shared across all train/test splits)."""
-
-    def one_fold(X, y, aux, w, i):
-        params = spec.fit(X, y, w, aux)
-        return spec.predict(params, X[i][None, :], aux)[0]
-
-    return jax.jit(jax.vmap(one_fold, in_axes=(None, None, None, 0, 0)))
-
-
-def _cv_predictions(spec, X, y, folds: np.ndarray):
-    """Held-out predictions for each LOO fold (vmapped weighted refits)."""
-    n = len(y)
-    aux = spec.make_aux(np.asarray(X, np.float64))
-    Xj = jnp.asarray(X, jnp.float32)
-    yj = jnp.asarray(y, jnp.float32)
-    W = 1.0 - jax.nn.one_hot(jnp.asarray(folds), n)          # [F, n]
-    out = _cv_fn(spec)(Xj, yj, aux, W, jnp.asarray(folds))
-    return np.asarray(out, np.float64)
 
 
 @dataclass
@@ -65,24 +44,20 @@ class C3OPredictor:
         rng = np.random.default_rng(self.seed)
         folds = (np.arange(n) if n <= self.max_cv_folds
                  else rng.choice(n, self.max_cv_folds, replace=False))
-        best, best_err = None, np.inf
-        residuals = None
-        for name in self.model_names:
-            spec = get_model(name)
-            pred = _cv_predictions(spec, X, y, folds)
-            pred = np.nan_to_num(pred, nan=1e12, posinf=1e12, neginf=-1e12)
-            ape = np.abs(pred - y[folds]) / np.maximum(np.abs(y[folds]), 1e-9)
-            mape = float(np.mean(ape))
-            self.cv_mape[name] = mape
-            if mape < best_err:
-                best, best_err = name, mape
-                residuals = pred - y[folds]          # seconds, signed
+        specs = [get_model(name) for name in self.model_names]
+        best, mapes, mu, sigma = engine.cv_select(specs, X, y, folds)
+        self.cv_mape.update(mapes)
         self.selected = best
-        self.mu = float(np.mean(residuals))
-        self.sigma = float(np.std(residuals) + 1e-12)
+        self.mu = mu
+        self.sigma = sigma
         from repro.core.models.api import FittedModel
         self._fitted = FittedModel(get_model(best), X, y)
         return self
+
+    def predict_device(self, X) -> jax.Array:
+        """Device-resident batched prediction (no host sync); grid sweeps
+        use this to pipeline dispatches across predictors."""
+        return self._fitted.predict_device(np.asarray(X, np.float64))
 
     def predict(self, X) -> np.ndarray:
         return self._fitted.predict(np.asarray(X, np.float64))
@@ -103,10 +78,13 @@ def evaluate_split(model_names, X_tr, y_tr, X_te, y_te,
     """
     from repro.core.models.api import FittedModel
     out = {}
+    pending = []                # dispatch every model before the first sync
     for name in model_names:
         fm = FittedModel(get_model(name), X_tr, y_tr)
-        pred = np.nan_to_num(fm.predict(X_te), nan=1e12, posinf=1e12,
-                             neginf=-1e12)
+        pending.append((name, fm.predict_device(np.asarray(X_te, np.float64))))
+    for name, p in pending:
+        pred = np.nan_to_num(np.asarray(p, np.float64), nan=1e12,
+                             posinf=1e12, neginf=-1e12)
         out[name] = float(np.mean(np.abs(pred - y_te)
                                   / np.maximum(np.abs(y_te), 1e-9)))
     if include_c3o:

@@ -1,0 +1,20 @@
+"""JAX version-compat helpers for AOT introspection.
+
+``Compiled.cost_analysis()`` returned a list with one dict per program on
+older JAX releases (<= 0.4.x) and a plain dict on newer ones; every consumer
+(dryrun records, roofline inputs, tests) goes through ``cost_analysis_dict``
+so both shapes look the same.
+"""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Flat {metric: value} cost analysis for a ``jax`` Compiled object."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        merged: dict = {}
+        for entry in cost:
+            for k, v in entry.items():
+                merged[k] = merged.get(k, 0.0) + v
+        return merged
+    return dict(cost)

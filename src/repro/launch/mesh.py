@@ -2,24 +2,39 @@
 
 ``make_production_mesh`` is a function (never a module-level constant) so that
 importing this module does not touch jax device state.
+
+``mesh_axis_types`` shims the ``jax.sharding.AxisType`` API across JAX
+versions: older releases (< 0.5) have neither the enum nor the
+``axis_types=`` kwarg on ``jax.make_mesh``, where every axis is implicitly
+Auto — the behavior we request explicitly on newer releases.
 """
 from __future__ import annotations
 
 import jax
 
 
+def mesh_axis_types(n_axes: int) -> dict:
+    """kwargs for ``jax.make_mesh``: explicit Auto axis types when the
+    running JAX supports them, empty (implicit Auto) otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh_auto(shape, axes, **kw):
+    """``jax.make_mesh`` with Auto axis types on every JAX version."""
+    return jax.make_mesh(shape, axes, **mesh_axis_types(len(axes)), **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((n // model_axis, model_axis), ("data", "model"))

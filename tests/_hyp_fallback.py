@@ -1,0 +1,65 @@
+"""Minimal stand-in for ``hypothesis`` so the suite collects (and the
+property tests still run as deterministic example sweeps) when hypothesis is
+not installed.  ``pip install -r requirements-dev.txt`` gets the real thing.
+
+Supports exactly the subset this test suite uses: ``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)``, and the
+``floats`` / ``integers`` / ``sampled_from`` / ``booleans`` strategies.
+Examples are drawn from a fixed-seed RNG, so failures reproduce.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_FALLBACK_MAX_EXAMPLES = 8      # keep the no-hypothesis lane fast
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample            # (random.Random) -> value
+
+
+def _floats(lo, hi):
+    return _Strategy(lambda r: r.uniform(lo, hi))
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq))
+
+
+def _booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+strategies = SimpleNamespace(floats=_floats, integers=_integers,
+                             sampled_from=_sampled_from, booleans=_booleans)
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = min(getattr(run, "_max_examples", 10), _FALLBACK_MAX_EXAMPLES)
+            rng = random.Random(1234)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # pytest must not mistake the strategy kwargs for fixtures: hide the
+        # wrapped signature (inspect.signature follows __wrapped__)
+        del run.__wrapped__
+        return run
+    return deco

@@ -1,7 +1,11 @@
 """Configurator properties (paper §IV) — includes hypothesis invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # graceful degrade: example sweeps
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.configurator import ClusterChoice, Configurator, \
     confidence_margin, choose_machine_type

@@ -69,8 +69,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 sys.path.insert(0, "%SRC%")
 from repro.train.checkpoint import save_checkpoint, restore_checkpoint
-mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_auto
+mesh = make_mesh_auto((len(jax.devices()),), ("data",))
 sh = NamedSharding(mesh, P("data"))
 x = jax.device_put(jnp.arange(32.0), sh)
 mode, path = sys.argv[2], sys.argv[3]
