@@ -14,8 +14,7 @@ train split first (exactly the paper's protocol).
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Sequence
+from typing import Dict, List
 
 import numpy as np
 

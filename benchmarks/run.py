@@ -7,6 +7,8 @@ inner evaluation where meaningful; derived = headline metric).
                 executable cache), candidate-grid scoring predictions/sec on
                 a 3-machine x 7-scale-out x 256-context grid, and speedup
                 over the seed per-row/fresh-jit path
+  serve         configuration service: joint choose_cluster_batch
+                throughput and async micro-batched front-end requests/s
   table1        dataset structure vs paper Table I
   table2        MAPE local/global x 5 jobs x {ernest,gbm,bom,ogb,c3o} (§VI-C.a)
   fig5          MAPE vs training-set size (§VI-C.b)
@@ -103,6 +105,60 @@ def bench_engine(args):
     _row("engine.seed_per_row_path", naive_per_ctx * 1e6,
          f"speedup_warm_vs_seed={naive_per_ctx / max(warm_per_ctx, 1e-12):.1f}x"
          " (target >=5x)")
+
+
+def bench_serve(args):
+    import asyncio
+
+    from repro.core.predictor import C3OPredictor
+    from repro.core.service import ConfigurationService
+    from repro.serve.config_service import AsyncConfigService
+    from repro.workloads import spark_emul as W
+
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    machines = sorted(W.MACHINES)
+    scaleouts = [2, 3, 4, 6, 8, 12, 16]
+    rng = np.random.default_rng(0)
+    contexts = np.stack([rng.uniform(10, 20, 256),
+                         rng.choice([.002, .02, .08], 256)], axis=1)
+    preds = {}
+    for m in machines:
+        d = W.generate_job_data("grep").filter_machine(m)
+        preds[m] = C3OPredictor(max_cv_folds=20).fit(d.X, d.y)
+    svc = ConfigurationService(preds, prices, scaleouts)
+
+    # --- synchronous joint grid selection ---------------------------------
+    svc.choose_cluster_batch(contexts, t_max=400.0)                # warm-up
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        svc.choose_cluster_batch(contexts, t_max=400.0)
+    joint_s = (time.time() - t0) / reps
+    n_cand = len(machines) * len(scaleouts) * len(contexts)
+    _row("serve.choose_cluster_batch", joint_s / len(contexts) * 1e6,
+         f"choices/s={len(contexts) / joint_s:.0f} "
+         f"grid={len(machines)}x{len(scaleouts)}x{len(contexts)} "
+         f"candidates/s={n_cand / joint_s:.0f}")
+
+    # --- async micro-batched front-end ------------------------------------
+    n_req = 512
+    t_maxes = [None if i % 4 == 0 else float(rng.uniform(200, 600))
+               for i in range(n_req)]
+
+    async def drive():
+        async with AsyncConfigService(svc, max_batch=128) as front:
+            await asyncio.gather(*[
+                front.choose(contexts[i % len(contexts)], t_max=t_maxes[i])
+                for i in range(n_req)])
+            return front.stats
+
+    asyncio.run(drive())                                           # warm-up
+    t0 = time.time()
+    stats = asyncio.run(drive())
+    serve_s = time.time() - t0
+    _row("serve.async_frontend", serve_s / n_req * 1e6,
+         f"requests/s={n_req / serve_s:.0f} "
+         f"mean_batch={stats.mean_batch:.1f} batches={stats.batches}")
 
 
 def bench_table1(args):
@@ -277,6 +333,7 @@ def bench_roofline(args):
 
 BENCHES = {
     "engine": bench_engine,
+    "serve": bench_serve,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig5": bench_fig5,

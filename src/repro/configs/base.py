@@ -8,8 +8,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+
+from typing import Callable, Dict, Tuple
+
 
 # Layer kinds appearing in ``block_pattern`` (repeated cyclically over depth).
 ATTN = "attn"            # full (global) attention

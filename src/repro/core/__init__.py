@@ -7,3 +7,4 @@ from repro.core.datastore import RuntimeDataStore, ValidationReport
 from repro.core.features import JobSchema, RuntimeData
 from repro.core.hub import Hub, JobRepo
 from repro.core.predictor import DEFAULT_MODELS, C3OPredictor, evaluate_split
+from repro.core.service import ConfigurationService

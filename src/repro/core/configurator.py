@@ -35,6 +35,17 @@ def confidence_margin(c: float, mu: float, sigma: float) -> float:
     return mu + float(erfinv(2.0 * c - 1.0)) * np.sqrt(2.0) * sigma
 
 
+def validate_confidence(c: float) -> float:
+    """Require 0 < c < 1: ``erfinv(2c-1)`` is ±inf at the endpoints, which
+    would make every runtime bound infinite (c=1: every deadline silently
+    unsatisfiable, falling through to the fastest-bound path)."""
+    if not 0.0 < float(c) < 1.0:
+        raise ValueError(
+            f"confidence must lie in the open interval (0, 1), got {c!r}: "
+            "the erfinv confidence bound is infinite at the endpoints")
+    return float(c)
+
+
 @dataclass(frozen=True)
 class ClusterChoice:
     machine_type: str
@@ -56,12 +67,18 @@ class Configurator:
     # working set misses cluster memory at this scale-out
     bottleneck_fn: Optional[Callable[[np.ndarray, int], bool]] = None
 
+    def __post_init__(self):
+        validate_confidence(self.confidence)
+
     # ------------------------- grid scoring -------------------------------
     def _score(self, contexts: np.ndarray):
         """(t, bound, cost, bottleneck) arrays, each [C, S]."""
         contexts = np.atleast_2d(np.asarray(contexts, np.float64))
         t, mu, sigma = engine.score_grid(self.predictor, self.scaleouts,
                                          contexts)
+        # a model extrapolating to a negative runtime must not produce a
+        # negative cost (which would win the cheapest-choice path)
+        t = np.maximum(t, 0.0)
         margin = confidence_margin(self.confidence, mu, sigma)
         S = np.asarray(self.scaleouts, np.float64)
         bound = t + margin

@@ -8,10 +8,10 @@ points; reject the contribution if the error increases significantly
 """
 from __future__ import annotations
 
+import hashlib
 import os
-import tempfile
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -48,6 +48,14 @@ class RuntimeDataStore:
         exactly when the data actually changed."""
         return self._version
 
+    @property
+    def fingerprint(self) -> str:
+        """Content hash of the TSV encoding.  Unlike ``version`` (an
+        in-process counter that restarts at 0), the fingerprint survives
+        save/load round-trips, so persisted fit caches key on it to decide
+        whether saved params still match the data on disk."""
+        return hashlib.sha256(self.data.to_tsv().encode()).hexdigest()
+
     # ----------------------- persistence ---------------------------------
     def save(self, path: str) -> None:
         tmp = path + ".tmp"
@@ -73,26 +81,52 @@ class RuntimeDataStore:
 
     def validate(self, contribution: RuntimeData,
                  machine: Optional[str] = None) -> ValidationReport:
+        """Validate EVERY machine type present in the contribution.
+
+        A mixed contribution used to be judged only against its first row's
+        machine type, so poisoned rows for any other machine type entered
+        the store unvalidated.  Now each machine-type group must pass on its
+        own partition of the held-out set; one failing group rejects the
+        whole contribution.  Groups the store holds too little data to
+        judge are accepted (the paper's scheme needs existing points to
+        validate against — that is how a new machine type bootstraps) but
+        named in the report reason so the bypass is visible.  ``machine``
+        restricts validation to one explicit machine type (legacy
+        single-machine call sites)."""
         rng = np.random.default_rng(self.seed)
-        machine = machine or contribution.machine_type[0]
+        machines = ([machine] if machine is not None
+                    else list(dict.fromkeys(contribution.machine_type)))
         n = len(self.data)
         idx = rng.permutation(n)
         hold = idx[: max(2, n // 5)]
         rest = idx[max(2, n // 5):]
         test = self.data.subset(hold)
         train = self.data.subset(rest)
-        base = self._mape(train, test, machine)
-        cand = self._mape(train.concat(contribution), test, machine)
-        if np.isnan(base) or np.isnan(cand):
-            return ValidationReport(True, base, cand,
+        cand_data = train.concat(contribution)
+        worst: Optional[ValidationReport] = None
+        unjudged = []
+        for m in machines:
+            base = self._mape(train, test, m)
+            cand = self._mape(cand_data, test, m)
+            if np.isnan(base) or np.isnan(cand):
+                unjudged.append(str(m))  # too little data to judge this group
+                continue
+            limit = base * self.reject_ratio + self.reject_slack
+            if cand > limit:
+                return ValidationReport(
+                    False, base, cand,
+                    f"machine {m}: error {cand:.3f} exceeds {limit:.3f} "
+                    f"(baseline {base:.3f}) — contribution rejected")
+            if worst is None or cand - base > \
+                    worst.candidate_mape - worst.baseline_mape:
+                worst = ValidationReport(True, base, cand, "accepted")
+        note = (f"; unvalidated (insufficient data): {', '.join(unjudged)}"
+                if unjudged else "")
+        if worst is None:
+            return ValidationReport(True, np.nan, np.nan,
                                     "insufficient data for validation")
-        limit = base * self.reject_ratio + self.reject_slack
-        if cand > limit:
-            return ValidationReport(
-                False, base, cand,
-                f"error {cand:.3f} exceeds {limit:.3f} "
-                f"(baseline {base:.3f}) — contribution rejected")
-        return ValidationReport(True, base, cand, "accepted")
+        return ValidationReport(True, worst.baseline_mape,
+                                worst.candidate_mape, worst.reason + note)
 
     def contribute(self, contribution: RuntimeData) -> ValidationReport:
         report = self.validate(contribution)

@@ -65,7 +65,7 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +120,14 @@ def cache_stats() -> Dict[str, int]:
     return {"fit": fit_executable.cache_info().currsize,
             "predict": predict_executable.cache_info().currsize,
             "cv": cv_executable.cache_info().currsize}
+
+
+def cache_clear() -> None:
+    """Drop all cached executables (tests emulate a fresh process with this:
+    after a warm-start restore, a zero fit/cv occupancy proves no refit)."""
+    fit_executable.cache_clear()
+    predict_executable.cache_clear()
+    cv_executable.cache_clear()
 
 
 # --------------------------------------------------------------------------
@@ -253,6 +261,9 @@ def machine_grid_costs(predictors: Dict[str, object],
         pending.append(_predict_rows(pred, rows))           # async dispatch
     t = np.stack([np.asarray(p, np.float64)
                   .reshape(len(S), len(contexts)).T for p in pending])
+    # clamp extrapolated negative runtimes: a negative cost would win every
+    # cheapest-choice selection downstream
+    t = np.maximum(t, 0.0)
     cost = np.stack([prices[m] for m in names])[:, None, None] \
         * (t / 3600.0) * S[None, None, :]
     return names, t, cost

@@ -9,8 +9,9 @@ that convention); the machine type is a partition key, not a model feature
 from __future__ import annotations
 
 import io
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+
+from typing import Tuple
 
 import numpy as np
 

@@ -9,10 +9,9 @@ API), and metadata for discovery on the hub.
 from __future__ import annotations
 
 import os
+import pickle
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
-
-import numpy as np
 
 from repro.core.configurator import Configurator
 from repro.core.datastore import RuntimeDataStore, ValidationReport
@@ -59,6 +58,73 @@ class JobRepo:
                                if k[2] == self.store.version}
             self._fit_cache[key] = pred
         return pred
+
+    # ------------------- fit-cache persistence ----------------------------
+    # Saved alongside the TSV store, each entry keyed on everything the fit
+    # depends on: (machine_type, seed, store fingerprint, model list).  The
+    # fingerprint is the cross-process form of the in-memory store version —
+    # an accepted ``contribute`` changes the data, hence the fingerprint,
+    # hence invalidates every persisted fit.
+
+    FITS_VERSION = 1
+
+    @staticmethod
+    def fits_path(store_path: str) -> str:
+        """Conventional sidecar location for a store at ``store_path``."""
+        return store_path + ".fits.pkl"
+
+    def save_fits(self, path: str) -> int:
+        """Serialize the cached fitted predictors; returns the entry count.
+
+        Only entries fitted at the CURRENT store version are saved:
+        ``predictor_for`` evicts stale versions lazily (on its next miss),
+        so right after an accepted ``contribute`` the cache can still hold
+        fits of the pre-contribution data — stamping those with the new
+        fingerprint would let a fresh process serve stale predictions."""
+        entries = []
+        for (machine_type, seed, ver, specs), pred in \
+                self._fit_cache.items():
+            if ver != self.store.version:
+                continue
+            entries.append({"machine_type": str(machine_type), "seed": seed,
+                            "model_names": tuple(s.name for s in specs),
+                            "state": pred.export_state()})
+        blob = pickle.dumps({"format": self.FITS_VERSION,
+                             "job": self.job,
+                             "fingerprint": self.store.fingerprint,
+                             "entries": entries})
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)            # atomic, like the store itself
+        return len(entries)
+
+    def load_fits(self, path: str) -> int:
+        """Warm-start the fit cache from a sidecar; returns how many entries
+        were restored.  Entries are dropped (forcing a refit on demand) when
+        the store content no longer matches the saved fingerprint, the model
+        list changed, or the selected model is no longer registered."""
+        from repro.core.models.api import get_model
+        from repro.core.predictor import C3OPredictor
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if payload.get("format") != self.FITS_VERSION \
+                or payload.get("fingerprint") != self.store.fingerprint:
+            return 0
+        restored = 0
+        for e in payload["entries"]:
+            if tuple(e["model_names"]) != tuple(self.model_names):
+                continue
+            try:
+                specs = tuple(get_model(n) for n in self.model_names)
+                d = self.store.data.filter_machine(e["machine_type"])
+                pred = C3OPredictor.from_state(e["state"], d.X)
+            except KeyError:             # a model left the registry
+                continue
+            key = (e["machine_type"], e["seed"], self.store.version, specs)
+            self._fit_cache[key] = pred
+            restored += 1
+        return restored
 
     def configurator(self, machine_type: str, prices: Dict[str, float],
                      scaleouts: Sequence[int], **kw) -> Configurator:

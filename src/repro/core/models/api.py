@@ -70,6 +70,23 @@ class FittedModel:
             jnp.asarray(w, jnp.float32), self.aux)
         self.name = spec.name
 
+    @classmethod
+    def from_params(cls, spec: ModelSpec, X: np.ndarray,
+                    params) -> "FittedModel":
+        """Rebuild a fitted model from persisted params WITHOUT fitting.
+
+        ``aux`` is recomputed from the training features (deterministic,
+        host-side numpy); ``params`` is the fit-output pytree (possibly with
+        numpy leaves from deserialization) — no fit executable is touched,
+        which is what lets a fresh process warm-start from a saved store."""
+        self = cls.__new__(cls)
+        X = np.asarray(X, np.float64)
+        self.spec = spec
+        self.aux = spec.make_aux(X)
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.name = spec.name
+        return self
+
     def predict_device(self, X) -> jax.Array:
         """Device-resident prediction (no host sync) — lets grid sweeps
         pipeline many dispatches before pulling results."""

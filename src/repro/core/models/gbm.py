@@ -11,7 +11,6 @@ feature values can never cause fit/predict disagreement.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -1,7 +1,6 @@
 """Weighted ridge regression + polynomial bases (building blocks for BOM)."""
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

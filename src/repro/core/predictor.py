@@ -54,6 +54,43 @@ class C3OPredictor:
         self._fitted = FittedModel(get_model(best), X, y)
         return self
 
+    # ------------------- warm-start persistence ---------------------------
+    def export_state(self) -> Dict:
+        """Everything a fresh process needs to serve predictions without
+        refitting: selected model, its fitted params (numpy leaves, so the
+        state is picklable without jax in the loop), and the CV calibration
+        the configurator's confidence bounds consume."""
+        if self.selected is None:
+            raise ValueError("predictor not fitted; nothing to export")
+        params_np = jax.tree_util.tree_map(lambda a: np.asarray(a),
+                                           self._fitted.params)
+        return {"model_names": tuple(self.model_names),
+                "max_cv_folds": self.max_cv_folds,
+                "seed": self.seed,
+                "selected": self.selected,
+                "cv_mape": dict(self.cv_mape),
+                "mu": self.mu,
+                "sigma": self.sigma,
+                "params": params_np}
+
+    @classmethod
+    def from_state(cls, state: Dict, X: np.ndarray) -> "C3OPredictor":
+        """Rebuild a fitted predictor from ``export_state`` output plus the
+        training data it was fitted on (the store's rows for this machine
+        type).  No fit or CV executable runs — only ``make_aux`` (numpy)."""
+        from repro.core.models.api import FittedModel
+        pred = cls(model_names=tuple(state["model_names"]),
+                   max_cv_folds=int(state["max_cv_folds"]),
+                   seed=int(state["seed"]))
+        pred.selected = state["selected"]
+        pred.cv_mape = dict(state["cv_mape"])
+        pred.mu = float(state["mu"])
+        pred.sigma = float(state["sigma"])
+        pred._fitted = FittedModel.from_params(
+            get_model(pred.selected), np.asarray(X, np.float64),
+            state["params"])
+        return pred
+
     def predict_device(self, X) -> jax.Array:
         """Device-resident batched prediction (no host sync); grid sweeps
         use this to pipeline dispatches across predictors."""

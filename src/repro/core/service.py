@@ -1,0 +1,141 @@
+"""Configuration service: joint (machine type, scale-out) selection for
+context batches in ONE engine dispatch.
+
+The paper's workflow (§III-§IV) treats machine type and scale-out as one
+cluster configuration decision; the two-phase path (``choose_machine_type``
+then ``Configurator.choose_scaleout``) approximates it with two separate
+calls and cannot see deadline interactions across machines.
+``ConfigurationService.choose_cluster_batch`` scores the full
+(machine x scale-out x context) grid through ``engine.machine_grid_costs``
+— every machine's grid prediction is dispatched before the first host sync,
+no per-machine Python-loop syncs — then selects machine and scale-out
+simultaneously with vectorized numpy:
+
+    deadline given:  cheapest (m, s) whose runtime bound meets the deadline
+                     (clean options first, bottlenecked fallback, then the
+                     fastest bound anywhere on the grid);
+    no deadline:     cheapest clean (m, s), else cheapest overall.
+
+Per-context deadlines may be a scalar, a [C] array, or NaN entries meaning
+"no deadline for this context" — that is what lets the async front-end
+(repro.serve.config_service) micro-batch heterogeneous requests into a
+single dispatch per tick.
+
+On grids where predicted cost increases with scale-out and one machine
+dominates (cheapest at every scale-out), the joint choice coincides with
+the composed two-phase path — tests/test_service.py proves that parity
+choice-for-choice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.configurator import (ClusterChoice, confidence_margin,
+                                     validate_confidence)
+
+
+@dataclass
+class ConfigurationService:
+    """Answers "best (machine type, scale-out) for these contexts under
+    these deadlines" over per-machine-type predictors.
+
+    Predictors must expose ``predict``/``predict_device`` plus the CV error
+    calibration attributes ``mu``/``sigma`` (``C3OPredictor`` does)."""
+
+    predictors: Dict[str, object]                # machine type -> predictor
+    prices: Dict[str, float]                     # $ per node-hour
+    scaleouts: Sequence[int]
+    confidence: float = 0.95
+    # optional bottleneck model: (machine, context_row, scale_out) -> True
+    # if the working set misses cluster memory on that machine at that s
+    bottleneck_fn: Optional[Callable[[str, np.ndarray, int], bool]] = None
+
+    def __post_init__(self):
+        validate_confidence(self.confidence)
+
+    @classmethod
+    def from_repo(cls, repo, machine_types: Sequence[str],
+                  prices: Dict[str, float], scaleouts: Sequence[int],
+                  seed: int = 0, **kw) -> "ConfigurationService":
+        """Build from a hub JobRepo: one (cached, possibly warm-started)
+        predictor per machine type via ``repo.predictor_for``."""
+        preds = {m: repo.predictor_for(m, seed=seed) for m in machine_types}
+        return cls(preds, prices, scaleouts, **kw)
+
+    # ------------------------- grid scoring -------------------------------
+    def score_cluster_grid(self, contexts: np.ndarray):
+        """(machine names, t, bound, cost, bottleneck), arrays [M, C, S].
+
+        One engine dispatch: every machine's grid prediction is enqueued
+        before the first host sync; runtimes are clamped at >= 0 so a model
+        extrapolating negative can never yield a cost that wins selection."""
+        contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+        names, t, cost = engine.machine_grid_costs(
+            self.predictors, self.prices, self.scaleouts, contexts)
+        margins = np.asarray([
+            confidence_margin(self.confidence,
+                              getattr(self.predictors[m], "mu", 0.0),
+                              getattr(self.predictors[m], "sigma", 0.0))
+            for m in names])
+        bound = t + margins[:, None, None]
+        if self.bottleneck_fn is not None:
+            bott = np.array([[[bool(self.bottleneck_fn(m, ctx, int(s)))
+                               for s in self.scaleouts]
+                              for ctx in contexts] for m in names])
+        else:
+            bott = np.zeros(t.shape, bool)
+        return names, t, bound, cost, bott
+
+    # ------------------------- choice selection ---------------------------
+    def choose_cluster_batch(self, contexts: np.ndarray,
+                             t_max: Union[None, float, np.ndarray] = None
+                             ) -> List[ClusterChoice]:
+        """Joint per-context (machine, scale-out) choices, one dispatch.
+
+        ``t_max``: scalar shared deadline, [C] per-context deadlines, or
+        None; NaN entries in the array mean "no deadline for this context"
+        (those contexts get the cheapest-clean rule)."""
+        contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+        names, t, bound, cost, bott = self.score_cluster_grid(contexts)
+        C, S = len(contexts), len(self.scaleouts)
+        K = len(names) * S
+        # [C, M*S] flat grids, machine-major (ties resolve to the first
+        # machine in dict order, matching choose_machine_type)
+        tf = np.transpose(t, (1, 0, 2)).reshape(C, K)
+        bf = np.transpose(bound, (1, 0, 2)).reshape(C, K)
+        cf = np.transpose(cost, (1, 0, 2)).reshape(C, K)
+        of = np.transpose(bott, (1, 0, 2)).reshape(C, K)
+
+        def masked_argmin(val, mask):
+            return np.where(mask, val, np.inf).argmin(1)
+
+        # no-deadline rule: cheapest clean, else cheapest overall
+        has_clean = (~of).any(1)
+        idx_nd = np.where(has_clean, masked_argmin(cf, ~of), cf.argmin(1))
+        if t_max is None:
+            idx = idx_nd
+        else:
+            tm = np.broadcast_to(np.asarray(t_max, np.float64), (C,))
+            ok = bf <= tm[:, None]                 # NaN deadline -> all False
+            ok_clean = ok & ~of
+            idx_dl = np.where(
+                ok_clean.any(1), masked_argmin(cf, ok_clean),
+                np.where(ok.any(1), masked_argmin(cf, ok), bf.argmin(1)))
+            idx = np.where(np.isnan(tm), idx_nd, idx_dl)
+        out = []
+        for c, j in enumerate(idx):
+            m, s = int(j) // S, int(j) % S
+            out.append(ClusterChoice(names[m], int(self.scaleouts[s]),
+                                     float(tf[c, j]), float(bf[c, j]),
+                                     float(cf[c, j]), bool(of[c, j])))
+        return out
+
+    def choose_cluster(self, context_row: np.ndarray,
+                       t_max: Optional[float] = None) -> ClusterChoice:
+        """Single-context convenience wrapper."""
+        return self.choose_cluster_batch(np.atleast_2d(context_row),
+                                         t_max)[0]

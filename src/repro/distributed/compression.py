@@ -14,7 +14,7 @@ those collectives are intra-layer latency-critical.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

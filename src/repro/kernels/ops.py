@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import (decode_attention as _da, flash_attention as _fa,
                            gbm_predict as _gp, mamba_scan as _ms, wkv6 as _wk)

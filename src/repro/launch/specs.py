@@ -8,8 +8,6 @@ function the (arch x shape) cell lowers:
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -10,8 +10,7 @@ block structure with a leading scan dimension.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ returned so the trainer can regularize toward uniform load.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

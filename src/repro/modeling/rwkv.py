@@ -16,8 +16,6 @@ this implementation.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,2 @@
+"""Serving front-ends: model-serving steps (serve_step) and the async
+cluster-configuration service (config_service)."""

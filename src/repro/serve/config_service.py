@@ -1,0 +1,134 @@
+"""Async front-end for the configuration service: micro-batched serving.
+
+Concurrent ``choose`` calls land on an asyncio queue; a single worker task
+drains everything pending each tick and answers the whole batch with ONE
+``ConfigurationService.choose_cluster_batch`` dispatch (one engine call for
+the full machine x scale-out x context grid).  Per-request deadlines are
+packed into a [C] array with NaN for "no deadline", which the service
+resolves per context — heterogeneous requests still share a dispatch.
+
+Usage:
+
+    svc = ConfigurationService(...)
+    async with AsyncConfigService(svc) as front:
+        choice = await front.choose(ctx, t_max=400.0)
+
+Throughput is measured by the ``serve`` benchmark lane
+(``python -m benchmarks.run --only serve``), which reports requests/s and
+the realized mean micro-batch size.
+"""
+from __future__ import annotations
+
+import asyncio
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.configurator import ClusterChoice
+from repro.core.service import ConfigurationService
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    batch_sizes: list = field(default_factory=list)
+
+    @property
+    def mean_batch(self) -> float:
+        return float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
+
+
+class AsyncConfigService:
+    """Micro-batching wrapper around a ``ConfigurationService``.
+
+    ``max_batch`` caps one dispatch's batch; ``tick_s`` is an optional
+    accumulation window after the first request of a batch arrives (0 means
+    "drain whatever is already queued", which keeps p50 latency at one
+    dispatch while still coalescing concurrent arrivals)."""
+
+    def __init__(self, service: ConfigurationService, *,
+                 max_batch: int = 256, tick_s: float = 0.0):
+        self.service = service
+        self.max_batch = max_batch
+        self.tick_s = tick_s
+        self.stats = ServeStats()
+        self._queue: asyncio.Queue = asyncio.Queue()
+        self._worker: Optional[asyncio.Task] = None
+
+    # ------------------------- lifecycle ----------------------------------
+    async def __aenter__(self) -> "AsyncConfigService":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def start(self) -> None:
+        if self._worker is None:
+            self._worker = asyncio.get_running_loop().create_task(self._run())
+
+    async def stop(self) -> None:
+        if self._worker is not None:
+            self._worker.cancel()
+            try:
+                await self._worker
+            except asyncio.CancelledError:
+                pass
+            self._worker = None
+        # fail anything still enqueued so no choose() caller hangs forever
+        while True:
+            try:
+                _, _, fut = self._queue.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            if not fut.done():
+                fut.cancel()
+
+    # ------------------------- request path -------------------------------
+    async def choose(self, context_row: np.ndarray,
+                     t_max: Optional[float] = None) -> ClusterChoice:
+        """Awaitable single request; answered as part of the next batch."""
+        fut = asyncio.get_running_loop().create_future()
+        await self._queue.put((np.asarray(context_row, np.float64),
+                               math.nan if t_max is None else float(t_max),
+                               fut))
+        return await fut
+
+    # ------------------------- worker loop --------------------------------
+    async def _run(self) -> None:
+        batch = []
+        try:
+            while True:
+                batch = [await self._queue.get()]
+                if self.tick_s > 0:
+                    await asyncio.sleep(self.tick_s)   # accumulation window
+                while len(batch) < self.max_batch:
+                    try:
+                        batch.append(self._queue.get_nowait())
+                    except asyncio.QueueEmpty:
+                        break
+                contexts = np.stack([b[0] for b in batch])
+                t_max = np.asarray([b[1] for b in batch])
+                try:
+                    choices = self.service.choose_cluster_batch(contexts,
+                                                                t_max)
+                except Exception as e:               # fan the failure out
+                    for _, _, fut in batch:
+                        if not fut.done():
+                            fut.set_exception(e)
+                    batch = []
+                    continue
+                self.stats.requests += len(batch)
+                self.stats.batches += 1
+                self.stats.batch_sizes.append(len(batch))
+                for (_, _, fut), choice in zip(batch, choices):
+                    if not fut.done():
+                        fut.set_result(choice)
+                batch = []
+        finally:
+            for _, _, fut in batch:  # cancelled mid-batch: don't strand them
+                if not fut.done():
+                    fut.cancel()

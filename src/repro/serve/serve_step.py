@@ -1,7 +1,7 @@
 """Serving: prefill and single-token decode steps with explicit caches."""
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ learnable (non-uniform) distribution so examples show loss going down.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

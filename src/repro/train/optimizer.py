@@ -8,7 +8,7 @@ models fit 512 x 16 GB HBM (see EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ data-parallel mean.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

@@ -19,7 +19,6 @@ occasional stragglers, and the median is kept (paper §VI-B).
 from __future__ import annotations
 
 import hashlib
-import itertools
 import math
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Tuple

@@ -3,7 +3,6 @@ NaNs, and the strongest cache-correctness check we have — teacher-forced
 decode must reproduce the full forward pass logits position by position
 (catches rope offsets, ring buffers, MLA absorbed decode, rwkv/mamba state
 carries, cross-attention caches)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

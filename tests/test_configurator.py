@@ -7,8 +7,8 @@ try:
 except ImportError:                      # graceful degrade: example sweeps
     from _hyp_fallback import given, settings, strategies as st
 
-from repro.core.configurator import ClusterChoice, Configurator, \
-    confidence_margin, choose_machine_type
+from repro.core.configurator import Configurator, confidence_margin, \
+    choose_machine_type
 from repro.core.predictor import C3OPredictor
 from repro.workloads import spark_emul as W
 
@@ -80,6 +80,52 @@ def test_bottleneck_scaleouts_avoided():
                          "m5.xlarge", PRICES, SCALEOUTS, bottleneck_fn=bott)
     ch2 = conf2.choose_scaleout(np.asarray([15.0]), t_max=600.0)
     assert ch2.runtime_bound_s <= 600.0
+
+
+class _NegativePredictor:
+    """Extrapolates to negative runtimes at large scale-outs (t = 100-10s):
+    without clamping, cost = price * t/3600 * s goes negative and *wins*
+    the cheapest-choice selection."""
+
+    mu, sigma = 0.0, 1.0
+
+    def predict(self, X):
+        s = np.asarray(X)[:, 0]
+        return 100.0 - 10.0 * s
+
+    def predict_with_error(self, X):
+        return self.predict(X), self.mu, self.sigma
+
+
+def test_negative_predicted_runtime_never_yields_negative_cost():
+    conf = Configurator(_NegativePredictor(), "m5.xlarge", PRICES, SCALEOUTS)
+    choice = conf.choose_scaleout(np.asarray([15.0]))
+    assert choice.cost_usd >= 0.0
+    assert choice.predicted_runtime_s >= 0.0
+    for _s, t, cost in conf.runtime_cost_pairs(np.asarray([15.0])):
+        assert t >= 0.0 and cost >= 0.0
+    # the engine's machine-grid path clamps identically
+    from repro.core import engine
+    _names, t, cost = engine.machine_grid_costs(
+        {"m5.xlarge": _NegativePredictor()}, PRICES, SCALEOUTS,
+        np.asarray([[15.0]]))
+    assert (t >= 0.0).all() and (cost >= 0.0).all()
+
+
+@pytest.mark.parametrize("c", [0.0, 1.0, -0.5, 1.5])
+def test_degenerate_confidence_rejected_at_construction(c):
+    """confidence_margin(1, ...) is erfinv(1) = inf — every deadline would
+    silently become unsatisfiable; reject the endpoints up front."""
+    with pytest.raises(ValueError, match="confidence"):
+        Configurator(_FakePredictor(), "m5.xlarge", PRICES, SCALEOUTS,
+                     confidence=c)
+
+
+def test_interior_confidence_accepted():
+    conf = Configurator(_FakePredictor(), "m5.xlarge", PRICES, SCALEOUTS,
+                        confidence=0.5)
+    assert np.isfinite(
+        conf.choose_scaleout(np.asarray([15.0]), t_max=400.0).runtime_bound_s)
 
 
 def test_deadline_satisfaction_rate_on_ground_truth():

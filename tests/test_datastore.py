@@ -40,6 +40,24 @@ def test_contribution_validation_rejects_fabricated(grep_data):
     assert len(store) == n0
 
 
+def test_mixed_contribution_poisoned_group_rejected(grep_data):
+    """Regression: validation used to judge only machine_type[0], so a mixed
+    contribution could smuggle poisoned rows for every OTHER machine type
+    into the store unvalidated."""
+    store = RuntimeDataStore(grep_data)
+    n0 = len(store)
+    good = grep_data.filter_machine("m5.xlarge").subset(np.arange(10))
+    bad = grep_data.filter_machine("c5.xlarge").subset(np.arange(25))
+    bad = RuntimeData(bad.schema, bad.machine_type, bad.X, bad.y * 40.0)
+    mixed = good.concat(bad)            # first row is the honest machine
+    assert mixed.machine_type[0] == "m5.xlarge"
+    rep = store.contribute(mixed)
+    assert not rep.accepted
+    assert "c5.xlarge" in rep.reason
+    assert len(store) == n0
+    assert store.version == 0
+
+
 def test_contribution_validation_accepts_honest(grep_data):
     rng = np.random.default_rng(0)
     idx = rng.permutation(len(grep_data))

@@ -1,10 +1,8 @@
 """Sharding rules, MoE EP parity, gradient compression."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import smoke_config

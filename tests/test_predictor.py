@@ -1,7 +1,5 @@
 """C3O predictor: dynamic model selection + Gaussian error calibration."""
 import numpy as np
-import pytest
-from scipy.special import erfinv
 
 from repro.core.configurator import confidence_margin
 from repro.core.predictor import C3OPredictor, evaluate_split

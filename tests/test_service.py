@@ -1,0 +1,260 @@
+"""Configuration-service contracts: joint choose_cluster_batch parity with
+the composed two-phase path, one-dispatch batching, fit-cache persistence
+(warm start + invalidation), and the async micro-batched front-end."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.configurator import Configurator, choose_machine_type
+from repro.core.datastore import RuntimeDataStore
+from repro.core.hub import JobRepo
+from repro.core.predictor import C3OPredictor
+from repro.core.service import ConfigurationService
+from repro.serve.config_service import AsyncConfigService
+from repro.workloads import spark_emul as W
+
+SCALEOUTS = [2, 3, 4, 6, 8, 12, 16]
+
+
+class _FakePredictor:
+    """Deterministic predictor t(s) = a/s + b*s + c with known error stats.
+
+    Cost ~ t*s = a + b*s^2 + c*s increases with s, so the cheapest
+    deadline-satisfying scale-out is also the smallest satisfying one —
+    the regime where the joint optimum is attainable by the two-phase path.
+    """
+
+    def __init__(self, a=1000.0, b=5.0, c=50.0, mu=0.0, sigma=10.0):
+        self.a, self.b, self.c = a, b, c
+        self.mu, self.sigma = mu, sigma
+        self.calls = 0
+
+    def predict(self, X):
+        self.calls += 1
+        s = np.asarray(X)[:, 0]
+        return self.a / s + self.b * s + self.c
+
+    def predict_with_error(self, X):
+        return self.predict(X), self.mu, self.sigma
+
+
+def _dominated_setup():
+    """Machine A dominates: lowest runtime curve AND lowest price, and is
+    first in dict order (ties in any fallback resolve identically)."""
+    preds = {"A": _FakePredictor(a=1000.0),
+             "B": _FakePredictor(a=1000.0),
+             "C": _FakePredictor(a=1200.0)}
+    prices = {"A": 0.10, "B": 0.20, "C": 0.30}
+    return preds, prices
+
+
+def _assert_same_choice(a, b):
+    assert a.machine_type == b.machine_type
+    assert a.scale_out == b.scale_out
+    assert a.bottleneck == b.bottleneck
+    np.testing.assert_allclose(a.predicted_runtime_s, b.predicted_runtime_s)
+    np.testing.assert_allclose(a.runtime_bound_s, b.runtime_bound_s)
+    np.testing.assert_allclose(a.cost_usd, b.cost_usd)
+
+
+# --------------------------------------------------------------------------
+# joint selection: parity with the composed two-phase path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bottleneck", [False, True])
+def test_joint_matches_two_phase_on_attainable_grid(bottleneck):
+    preds, prices = _dominated_setup()
+    svc_bott = (lambda m, ctx, s: s <= 4) if bottleneck else None
+    conf_bott = (lambda ctx, s: s <= 4) if bottleneck else None
+    svc = ConfigurationService(preds, prices, SCALEOUTS, confidence=0.9,
+                               bottleneck_fn=svc_bott)
+    rng = np.random.default_rng(7)
+    contexts = rng.uniform(10, 20, (24, 1))
+    t_maxes = rng.uniform(250, 800, 24)        # attainable range for A
+    for tm in (None, t_maxes):
+        joint = svc.choose_cluster_batch(contexts, t_max=tm)
+        assert len(joint) == len(contexts)
+        for i, (ctx, ch) in enumerate(zip(contexts, joint)):
+            m = choose_machine_type(preds, prices, SCALEOUTS, ctx)
+            conf = Configurator(preds[m], m, prices, SCALEOUTS,
+                                confidence=0.9, bottleneck_fn=conf_bott)
+            two_phase = conf.choose_scaleout(
+                ctx, t_max=None if tm is None else float(t_maxes[i]))
+            _assert_same_choice(ch, two_phase)
+
+
+def test_joint_parity_on_real_predictors():
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    machines = sorted(W.MACHINES)
+    preds = {}
+    for m in machines:
+        d = W.generate_job_data("grep").filter_machine(m)
+        preds[m] = C3OPredictor(max_cv_folds=15).fit(d.X, d.y)
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+    rng = np.random.default_rng(3)
+    contexts = np.stack([rng.uniform(10, 20, 8),
+                         rng.choice([.002, .02, .08], 8)], axis=1)
+    # no-deadline: joint cheapest == two-phase cheapest machine + cheapest s
+    for ctx, ch in zip(contexts, svc.choose_cluster_batch(contexts)):
+        m = choose_machine_type(preds, prices, SCALEOUTS, ctx)
+        conf = Configurator(preds[m], m, prices, SCALEOUTS)
+        _assert_same_choice(ch, conf.choose_scaleout(ctx))
+
+
+def test_joint_is_one_dispatch_per_machine():
+    """A whole context batch costs ONE predict call per machine — no
+    per-context or per-scale-out Python-loop dispatches."""
+    preds, prices = _dominated_setup()
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+    contexts = np.random.default_rng(0).uniform(10, 20, (64, 1))
+    svc.choose_cluster_batch(contexts, t_max=400.0)
+    assert all(p.calls == 1 for p in preds.values())
+
+
+def test_mixed_nan_deadlines_resolve_per_context():
+    preds, prices = _dominated_setup()
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+    contexts = np.asarray([[12.0], [15.0], [18.0]])
+    tm = np.asarray([400.0, np.nan, 300.0])
+    mixed = svc.choose_cluster_batch(contexts, t_max=tm)
+    _assert_same_choice(
+        mixed[1], svc.choose_cluster_batch(contexts[1:2], t_max=None)[0])
+    _assert_same_choice(
+        mixed[0], svc.choose_cluster_batch(contexts[:1], t_max=400.0)[0])
+    _assert_same_choice(
+        mixed[2], svc.choose_cluster_batch(contexts[2:], t_max=300.0)[0])
+
+
+def test_service_rejects_degenerate_confidence():
+    preds, prices = _dominated_setup()
+    for c in (0.0, 1.0):
+        with pytest.raises(ValueError, match="confidence"):
+            ConfigurationService(preds, prices, SCALEOUTS, confidence=c)
+
+
+# --------------------------------------------------------------------------
+# fit-cache persistence: warm start + invalidation
+# --------------------------------------------------------------------------
+
+def _fresh_repo(data, seed=0):
+    store = RuntimeDataStore(data, seed=seed)
+    return JobRepo("grep", "grep", data.schema, store), store
+
+
+def test_warm_start_roundtrip_serves_without_refit(tmp_path):
+    data = W.generate_job_data("grep")
+    repo, store = _fresh_repo(data)
+    p1 = repo.predictor_for("m5.xlarge")
+    store_path = str(tmp_path / "grep.tsv")
+    store.save(store_path)
+    assert repo.save_fits(JobRepo.fits_path(store_path)) == 1
+
+    # fresh-process emulation: reload store + fits, drop every executable
+    store2 = RuntimeDataStore.load(store_path, data.schema)
+    repo2 = JobRepo("grep", "grep", data.schema, store2)
+    assert repo2.load_fits(JobRepo.fits_path(store_path)) == 1
+    engine.cache_clear()
+    p2 = repo2.predictor_for("m5.xlarge")
+    rng = np.random.default_rng(5)
+    q = np.stack([rng.choice(SCALEOUTS, 16).astype(float),
+                  rng.uniform(10, 20, 16),
+                  rng.choice([.002, .02, .08], 16)], axis=1)
+    out = p2.predict(q)
+    stats = engine.cache_stats()
+    assert stats["fit"] == 0 and stats["cv"] == 0       # zero refits
+    assert stats["predict"] >= 1                        # ...but it served
+    assert p2.selected == p1.selected
+    np.testing.assert_allclose(p2.mu, p1.mu)
+    np.testing.assert_allclose(p2.sigma, p1.sigma)
+    np.testing.assert_allclose(out, p1.predict(q), rtol=2e-5, atol=1e-3)
+
+
+def test_accepted_contribution_invalidates_persisted_fits(tmp_path):
+    data = W.generate_job_data("grep")
+    repo, store = _fresh_repo(data)
+    repo.predictor_for("m5.xlarge")
+    store_path = str(tmp_path / "grep.tsv")
+    store.save(store_path)
+    fits = JobRepo.fits_path(store_path)
+    repo.save_fits(fits)
+
+    repo2, store2 = _fresh_repo(
+        RuntimeDataStore.load(store_path, data.schema).data)
+    assert repo2.load_fits(fits) == 1
+    p_warm = repo2.predictor_for("m5.xlarge")
+
+    d = data.filter_machine("m5.xlarge")
+    good = d.subset(np.arange(3))
+    good.y = good.y * 1.01
+    report = repo2.contribute(good)
+    assert report.accepted and store2.version == 1
+    # in-process: version bump forces a refit (warm entry is stale)
+    assert repo2.predictor_for("m5.xlarge") is not p_warm
+    # cross-process: the fingerprint changed, so the old sidecar is refused
+    repo3, _ = _fresh_repo(store2.data)
+    assert repo3.load_fits(fits) == 0
+
+
+def test_save_fits_skips_stale_version_entries(tmp_path):
+    """Regression: after an accepted contribute, the cache can still hold a
+    fit of the PRE-contribution data (eviction is lazy).  save_fits must not
+    stamp that stale fit with the new store fingerprint."""
+    data = W.generate_job_data("grep")
+    repo, store = _fresh_repo(data)
+    repo.predictor_for("m5.xlarge")           # fitted at version 0
+    d = data.filter_machine("m5.xlarge")
+    good = d.subset(np.arange(3))
+    good.y = good.y * 1.01
+    assert repo.contribute(good).accepted     # version 1; cache entry stale
+    fits = JobRepo.fits_path(str(tmp_path / "grep.tsv"))
+    assert repo.save_fits(fits) == 0          # nothing current to save
+    repo.predictor_for("m5.xlarge")           # refit on the real data
+    assert repo.save_fits(fits) == 1
+
+
+# --------------------------------------------------------------------------
+# async micro-batched front-end
+# --------------------------------------------------------------------------
+
+def test_async_frontend_matches_sync_and_coalesces():
+    preds, prices = _dominated_setup()
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+    rng = np.random.default_rng(11)
+    contexts = rng.uniform(10, 20, (32, 1))
+    t_maxes = [None if i % 3 == 0 else float(rng.uniform(250, 800))
+               for i in range(32)]
+
+    async def drive():
+        async with AsyncConfigService(svc, max_batch=64) as front:
+            got = await asyncio.gather(*[
+                front.choose(contexts[i], t_max=t_maxes[i])
+                for i in range(32)])
+            return got, front.stats
+
+    got, stats = asyncio.run(drive())
+    tm = np.asarray([np.nan if t is None else t for t in t_maxes])
+    want = svc.choose_cluster_batch(contexts, t_max=tm)
+    for a, b in zip(got, want):
+        _assert_same_choice(a, b)
+    assert stats.requests == 32
+    assert stats.batches < 32          # concurrent arrivals shared dispatches
+    assert stats.mean_batch > 1.0
+
+
+def test_async_frontend_stop_cancels_pending_requests():
+    """stop() must not strand an in-flight choose(): anything still queued
+    is cancelled, not left hanging forever."""
+    preds, prices = _dominated_setup()
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+
+    async def drive():
+        front = AsyncConfigService(svc)     # worker never started
+        req = asyncio.ensure_future(front.choose(np.asarray([15.0])))
+        await asyncio.sleep(0)              # let the request enqueue
+        await front.stop()
+        with pytest.raises(asyncio.CancelledError):
+            await req
+
+    asyncio.run(drive())

@@ -3,8 +3,7 @@ C3O-for-TPU integration."""
 import numpy as np
 import pytest
 
-from repro.core import (C3OPredictor, Configurator, Hub, JobRepo,
-                        RuntimeDataStore)
+from repro.core import Hub, JobRepo, RuntimeDataStore
 from repro.workloads import spark_emul as W
 
 

@@ -2,7 +2,6 @@
 elastic re-sharding, straggler watchdog wiring."""
 import json
 import os
-import shutil
 import subprocess
 import sys
 

@@ -1,6 +1,5 @@
 """Workload emulator: Table I structure + runtime-law sanity."""
 import numpy as np
-import pytest
 
 from repro.workloads import spark_emul as W
 
