@@ -9,6 +9,9 @@ inner evaluation where meaningful; derived = headline metric).
                 over the seed per-row/fresh-jit path
   serve         configuration service: joint choose_cluster_batch
                 throughput and async micro-batched front-end requests/s
+  ingest        contribution ingestion at 10k stored rows: contributions/s
+                and rows/s, cold vs warm, vs the pre-refactor
+                re-encode/re-hash/refit-from-scratch path
   table1        dataset structure vs paper Table I
   table2        MAPE local/global x 5 jobs x {ernest,gbm,bom,ogb,c3o} (§VI-C.a)
   fig5          MAPE vs training-set size (§VI-C.b)
@@ -159,6 +162,87 @@ def bench_serve(args):
     _row("serve.async_frontend", serve_s / n_req * 1e6,
          f"requests/s={n_req / serve_s:.0f} "
          f"mean_batch={stats.mean_batch:.1f} batches={stats.batches}")
+
+
+def bench_ingest(args):
+    """Contribution-ingestion throughput on a 10k-row collaborative store.
+
+    ``ingest.contribute_cold``  first contribution (compiles executables)
+    ``ingest.contribute_warm``  steady-state contributions/s and rows/s
+    ``ingest.legacy_path``      pre-refactor emulation: O(N) TSV re-encode +
+                                re-hash per contribution, fresh CV predictor
+                                per machine group, full-copy concat — the
+                                headline reports the warm speedup over it
+                                (acceptance target >= 10x).
+    """
+    import hashlib
+
+    from repro.core.datastore import RuntimeDataStore
+    from repro.core.features import RuntimeData
+    from repro.core.predictor import C3OPredictor
+    from repro.workloads import spark_emul as W
+
+    base = W.generate_job_data("grep")
+    rng = np.random.default_rng(0)
+    n_store, n_delta = 10_000, 20
+    idx = np.tile(np.arange(len(base)), -(-n_store // len(base)))[:n_store]
+    data = RuntimeData.from_columns(
+        base.schema, base.machines, base.codes[idx], base.scale_out[idx],
+        base.context[idx],
+        base.runtime[idx] * rng.lognormal(0.0, 0.01, n_store))
+
+    def delta():
+        j = rng.integers(0, len(base), n_delta)
+        return RuntimeData.from_columns(
+            base.schema, base.machines, base.codes[j], base.scale_out[j],
+            base.context[j],
+            base.runtime[j] * rng.lognormal(0.0, 0.01, n_delta))
+
+    store = RuntimeDataStore(data, seed=0)
+    t0 = time.time()
+    assert store.contribute(delta()).accepted
+    cold = time.time() - t0
+    _row("ingest.contribute_cold", cold * 1e6,
+         f"first contribution at {n_store} stored rows (compiles)")
+
+    reps = 10
+    t0 = time.time()
+    accepted = sum(store.contribute(delta()).accepted for _ in range(reps))
+    warm = (time.time() - t0) / reps
+    _row("ingest.contribute_warm", warm * 1e6,
+         f"contributions/s={1 / warm:.1f} rows/s={n_delta / warm:.0f} "
+         f"accepted={accepted}/{reps} store_rows={len(store)}")
+
+    # --- pre-refactor path: full re-encode/re-hash + fresh CV predictors --
+    def legacy_contribute(st, contribution):
+        hashlib.sha256(st.data.to_tsv().encode()).hexdigest()  # O(N) rehash
+        vrng = np.random.default_rng(st.seed)
+        n = len(st.data)
+        pidx = vrng.permutation(n)
+        test = st.data.subset(pidx[: max(2, n // 5)])
+        train = st.data.subset(pidx[max(2, n // 5):][:1024])
+        cand = train.concat(contribution)
+        for m in dict.fromkeys(contribution.machine_type):
+            for dset in (train, cand):
+                tr = dset.filter_machine(m)
+                te = test.filter_machine(m)
+                pred = C3OPredictor(max_cv_folds=15, seed=st.seed) \
+                    .fit(tr.X, tr.y)
+                p = np.nan_to_num(pred.predict(te.X), nan=1e12, posinf=1e12)
+                np.mean(np.abs(p - te.y) / np.maximum(te.y, 1e-9))
+        st.data = st.data.concat(contribution)
+
+    store_l = RuntimeDataStore(data, seed=0)
+    legacy_contribute(store_l, delta())                        # warm-up
+    reps_l = 3
+    t0 = time.time()
+    for _ in range(reps_l):
+        legacy_contribute(store_l, delta())
+    legacy = (time.time() - t0) / reps_l
+    _row("ingest.legacy_path", legacy * 1e6,
+         f"contributions/s={1 / legacy:.1f} "
+         f"speedup_warm_vs_legacy={legacy / max(warm, 1e-9):.1f}x "
+         "(target >=10x)")
 
 
 def bench_table1(args):
@@ -334,6 +418,7 @@ def bench_roofline(args):
 BENCHES = {
     "engine": bench_engine,
     "serve": bench_serve,
+    "ingest": bench_ingest,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig5": bench_fig5,

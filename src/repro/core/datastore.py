@@ -1,22 +1,34 @@
 """Collaborative runtime-data store with contribution validation (paper §III-C).
 
-Runtime data lives as TSV alongside the job (one store per job repo).
-``contribute`` implements §III-C.b: retrain the predictor with the candidate
-rows included and evaluate on a held-out test set of *previously existing*
-points; reject the contribution if the error increases significantly
-(corrupted or fabricated data would poison every collaborator's models).
+Runtime data lives as TSV alongside the job (one store per job repo), but
+in memory the store is columnar (``repro.core.features.RuntimeData``) and
+ingestion is incremental:
+
+  * accepted contributions are *appended* into spare column capacity
+    (amortized O(delta), no full-store copy);
+  * the content fingerprint is a streaming SHA-256 over the canonical TSV
+    byte stream, advanced per accepted delta — byte-for-byte identical to
+    hashing the full TSV export, with no O(N) re-encode per contribution;
+  * validation (§III-C.b) routes through the prediction engine's cached
+    fit executables (``engine.holdout_mape``) instead of constructing a
+    fresh CV predictor per machine group.
+
+``contribute`` implements §III-C.b: retrain the model pool with the
+candidate rows included and evaluate on a held-out test set of *previously
+existing* points; reject the contribution if the error increases
+significantly (corrupted or fabricated data would poison every
+collaborator's models).
 """
 from __future__ import annotations
 
 import hashlib
 import os
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.features import JobSchema, RuntimeData
-from repro.core.predictor import C3OPredictor
 
 
 @dataclass
@@ -31,12 +43,33 @@ class RuntimeDataStore:
     """One shared store per (job, repository)."""
 
     def __init__(self, data: RuntimeData, *, reject_ratio: float = 1.5,
-                 reject_slack: float = 0.02, seed: int = 0):
-        self.data = data
+                 reject_slack: float = 0.02, seed: int = 0,
+                 model_names: Optional[Sequence[str]] = None,
+                 max_validation_rows: int = 1024):
         self.reject_ratio = reject_ratio
         self.reject_slack = reject_slack
         self.seed = seed
+        self.model_names = model_names
+        # validation retrains/tests on at most this many existing rows per
+        # side: keeps the per-contribution cost flat as the collaborative
+        # store grows (the optimistic models' group aux is O(n^2), so
+        # unbounded validation would dominate ingestion at hub scale)
+        self.max_validation_rows = max_validation_rows
         self._version = 0
+        self.data = data          # property setter seeds the fingerprint
+
+    @property
+    def data(self) -> RuntimeData:
+        return self._data
+
+    @data.setter
+    def data(self, value: RuntimeData) -> None:
+        """Replacing the data wholesale re-seeds the streaming fingerprint
+        from the new content (O(N), correct for arbitrary edits); the
+        ``contribute`` fast path bypasses this and advances the existing
+        chain with just its delta."""
+        self._data = value
+        self._hasher = hashlib.sha256(value.to_tsv().encode())
 
     def __len__(self):
         return len(self.data)
@@ -53,8 +86,15 @@ class RuntimeDataStore:
         """Content hash of the TSV encoding.  Unlike ``version`` (an
         in-process counter that restarts at 0), the fingerprint survives
         save/load round-trips, so persisted fit caches key on it to decide
-        whether saved params still match the data on disk."""
-        return hashlib.sha256(self.data.to_tsv().encode()).hexdigest()
+        whether saved params still match the data on disk.
+
+        Maintained as a chained digest: the hasher consumed the initial
+        store's canonical TSV bytes once at construction and each accepted
+        contribution's delta rows since.  Because SHA-256 is a stream hash,
+        the chained value equals ``sha256(data.to_tsv())`` at every point —
+        contribution boundaries leave no trace — while ``contribute`` pays
+        O(delta), not O(N), to advance it."""
+        return self._hasher.hexdigest()
 
     # ----------------------- persistence ---------------------------------
     def save(self, path: str) -> None:
@@ -69,15 +109,26 @@ class RuntimeDataStore:
             return cls(RuntimeData.from_tsv(f.read(), schema), **kw)
 
     # ----------------------- validation (§III-C.b) ------------------------
+    def _model_specs(self):
+        from repro.core.models.api import get_model
+        from repro.core.predictor import DEFAULT_MODELS
+        names = self.model_names or DEFAULT_MODELS
+        return [get_model(n) for n in names]
+
     def _mape(self, train: RuntimeData, test: RuntimeData,
               machine: str) -> float:
-        tr = train.filter_machine(machine)
-        te = test.filter_machine(machine)
+        """Held-out MAPE of the best model in the pool for one machine type.
+
+        All models fit through the engine's process-wide cached executables
+        (one dispatch each, single sync) — no throwaway CV predictor is
+        constructed per validation call."""
+        from repro.core import engine
+        tr = train.machine_view(machine)
+        te = test.machine_view(machine)
         if len(tr) < 5 or len(te) < 2:
             return np.nan
-        pred = C3OPredictor(max_cv_folds=15, seed=self.seed).fit(tr.X, tr.y)
-        p = np.nan_to_num(pred.predict(te.X), nan=1e12, posinf=1e12)
-        return float(np.mean(np.abs(p - te.y) / np.maximum(te.y, 1e-9)))
+        return engine.holdout_mape(self._model_specs(), tr.X, tr.y,
+                                   te.X, te.y)
 
     def validate(self, contribution: RuntimeData,
                  machine: Optional[str] = None) -> ValidationReport:
@@ -93,16 +144,25 @@ class RuntimeDataStore:
         named in the report reason so the bypass is visible.  ``machine``
         restricts validation to one explicit machine type (legacy
         single-machine call sites)."""
+        if len(contribution) == 0:
+            return ValidationReport(
+                False, np.nan, np.nan,
+                "empty contribution: no rows to validate or ingest")
         rng = np.random.default_rng(self.seed)
         machines = ([machine] if machine is not None
-                    else list(dict.fromkeys(contribution.machine_type)))
+                    else list(contribution.present_machines()))
         n = len(self.data)
         idx = rng.permutation(n)
-        hold = idx[: max(2, n // 5)]
-        rest = idx[max(2, n // 5):]
+        # both splits are capped so validation cost stays flat as the store
+        # grows — only the train side below ever feeds an O(n^2) model aux,
+        # but an uncapped holdout would still pay O(N) predictions per call
+        hold = idx[: max(2, n // 5)][: self.max_validation_rows]
+        rest = idx[max(2, n // 5):][: self.max_validation_rows]
         test = self.data.subset(hold)
         train = self.data.subset(rest)
-        cand_data = train.concat(contribution)
+        # the candidate set keeps the FULL contribution on top of the capped
+        # train subset — poisoned rows must never be sampled away
+        cand_data = train.append(contribution)
         worst: Optional[ValidationReport] = None
         unjudged = []
         for m in machines:
@@ -129,8 +189,14 @@ class RuntimeDataStore:
                                 worst.candidate_mape, worst.reason + note)
 
     def contribute(self, contribution: RuntimeData) -> ValidationReport:
+        """Validate and (if accepted) ingest incrementally: columnar append
+        into tail capacity plus an O(delta) fingerprint-chain advance — the
+        stored rows are never re-encoded or re-hashed."""
         report = self.validate(contribution)
         if report.accepted:
-            self.data = self.data.concat(contribution)
+            # bypass the data setter: the append only adds the delta rows,
+            # so the chained hash advances in O(delta), not O(N)
+            self._data = self._data.append(contribution)
+            self._hasher.update(contribution.tsv_delta_bytes())
             self._version += 1
         return report

@@ -31,6 +31,19 @@ Cache keys
     data shape never retrace, across any number of ``FittedModel`` or
     ``C3OPredictor`` instances.
 
+``val_executable(spec)``
+    Fused fit + masked holdout-MAPE for contribution validation
+    (``RuntimeDataStore``): inputs are zero-padded to power-of-two row
+    buckets, so validating against a store that grows row by row keeps
+    hitting the same compiled executable.
+
+``cv_executable_sharded(spec, n_devices)``
+    LOO-CV with the fold axis partitioned over a one-dimensional "cv" mesh
+    (``shard_map``; fold-weight buffers donated off-CPU).  ``cv_select``
+    routes here when the host has multiple devices (or ``C3O_CV_SHARD=on``)
+    and falls back to the numerically-reference single-device path
+    otherwise.
+
 ``_gbm_kernel_executable(interpret)``
     The Pallas boosted-ensemble inference kernel
     (``repro.kernels.gbm_predict``) jitted once per interpret mode.  Batched
@@ -65,7 +78,7 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +105,73 @@ def predict_executable(spec: ModelSpec):
 
 
 @functools.lru_cache(maxsize=None)
+def val_executable(spec: ModelSpec):
+    """Cached jitted fused fit+holdout-MAPE for one model.
+
+    (X_tr, y_tr, w, X_te, y_te, valid, aux) -> scalar MAPE on the valid
+    rows of the held-out split; the contribution validator dispatches every
+    pool model through this (one executable per spec, shared process-wide)
+    instead of constructing a throwaway CV predictor per call.  ``w`` and
+    ``valid`` are 0/1 masks so callers can pad both splits to bucketed
+    shapes — XLA then keeps one executable per bucket, not one per exact
+    store size.
+    """
+
+    def _val(X_tr, y_tr, w, X_te, y_te, valid, aux):
+        params = spec.fit(X_tr, y_tr, w, aux)
+        pred = spec.predict(params, X_te, aux)
+        pred = jnp.nan_to_num(pred, nan=1e12, posinf=1e12, neginf=-1e12)
+        ape = jnp.abs(pred - y_te) / jnp.maximum(jnp.abs(y_te), 1e-9)
+        return (ape * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+    return jax.jit(_val)
+
+
+def _bucket(n: int, lo: int = 32) -> int:
+    """Next power-of-two shape bucket >= n (stable executables while the
+    collaborative store grows row by row)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def holdout_mape(specs: Sequence[ModelSpec], X_tr: np.ndarray,
+                 y_tr: np.ndarray, X_te: np.ndarray,
+                 y_te: np.ndarray) -> float:
+    """Best (lowest) held-out MAPE over the model pool, one fused dispatch
+    per model and a single host sync at the end.
+
+    Inputs are zero-padded to power-of-two row buckets with 0-weight /
+    invalid masks (every pool model fits weighted, so w=0 rows are inert):
+    repeated validations against a growing store hit the SAME compiled
+    executable instead of retracing per store size.
+    """
+    X_tr64 = np.asarray(X_tr, np.float64)
+    n_tr, n_te = len(y_tr), len(y_te)
+    b_tr, b_te = _bucket(n_tr), _bucket(n_te)
+    Xp = np.zeros((b_tr, X_tr64.shape[1]), np.float64)
+    Xp[:n_tr] = X_tr64
+    yp = np.ones(b_tr, np.float32)
+    yp[:n_tr] = y_tr
+    w = np.zeros(b_tr, np.float32)
+    w[:n_tr] = 1.0
+    Xq = np.zeros((b_te, Xp.shape[1]), np.float64)
+    Xq[:n_te] = np.asarray(X_te, np.float64)
+    yq = np.ones(b_te, np.float32)
+    yq[:n_te] = y_te
+    valid = np.zeros(b_te, np.float32)
+    valid[:n_te] = 1.0
+    Xtr, ytr = jnp.asarray(Xp, jnp.float32), jnp.asarray(yp)
+    Xte, yte = jnp.asarray(Xq, jnp.float32), jnp.asarray(yq)
+    wj, vj = jnp.asarray(w), jnp.asarray(valid)
+    pending = [val_executable(spec)(Xtr, ytr, wj, Xte, yte, vj,
+                                    spec.make_aux(Xp))
+               for spec in specs]
+    return float(min(float(m) for m in pending))
+
+
+@functools.lru_cache(maxsize=None)
 def cv_executable(spec: ModelSpec):
     """Cached jitted fused LOO-CV for one model.
 
@@ -115,11 +195,86 @@ def cv_executable(spec: ModelSpec):
     return jax.jit(_cv)
 
 
+# --------------------------------------------------------------------------
+# Device-sharded CV (fold axis partitioned over the mesh)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _cv_mesh(n_devices: int):
+    """One-dimensional "cv" mesh over the first ``n_devices`` devices."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:n_devices]), ("cv",))
+
+
+@functools.lru_cache(maxsize=None)
+def cv_executable_sharded(spec: ModelSpec, n_devices: int):
+    """Cached jitted LOO-CV for one model, folds sharded over the mesh.
+
+    The (model pool x folds) work grid is partitioned across devices: fold
+    shards run data-parallel under ``shard_map`` (each device refits its
+    slice of the fold-weight matrix) while the pool dimension pipelines
+    dispatches exactly like the single-device path.  Inputs are the padded
+    fold arrays (F_pad divisible by the device count) plus a 0/1 validity
+    mask; MAPE/residual moments reduce via ``psum`` so every device holds
+    the replicated scalars and the host pulls once per model.  The
+    fold-weight buffer is donated — at F_pad x n floats it is the dominant
+    allocation and is dead after the refits.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    mesh = _cv_mesh(n_devices)
+
+    def _shard(X, y, W, fold_idx, valid, aux):
+        # local shards: W [F_pad/dev, n], fold_idx/valid [F_pad/dev]
+        def one_fold(w, i):
+            params = spec.fit(X, y, w, aux)
+            return spec.predict(params, X[i][None, :], aux)[0]
+
+        pred = jax.vmap(one_fold)(W, fold_idx)
+        pred = jnp.nan_to_num(pred, nan=1e12, posinf=1e12, neginf=-1e12)
+        y_f = y[fold_idx]
+        ape = jnp.abs(pred - y_f) / jnp.maximum(jnp.abs(y_f), 1e-9)
+        resid = pred - y_f
+        cnt = jax.lax.psum((valid).sum(), "cv")
+        ape_s = jax.lax.psum((ape * valid).sum(), "cv")
+        r_s = jax.lax.psum((resid * valid).sum(), "cv")
+        r2_s = jax.lax.psum((resid * resid * valid).sum(), "cv")
+        mape = ape_s / cnt
+        mu = r_s / cnt
+        sigma = jnp.sqrt(jnp.maximum(r2_s / cnt - mu * mu, 0.0))
+        return mape, mu, sigma
+
+    fn = shard_map(_shard, mesh=mesh,
+                   in_specs=(P(), P(), P("cv"), P("cv"), P("cv"), P()),
+                   out_specs=(P(), P(), P()), check_vma=False)
+    # donating on CPU only triggers "donation not implemented" warnings
+    donate = () if jax.default_backend() == "cpu" else (2,)
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def _cv_shard_devices() -> int:
+    """How many devices the sharded CV path should span (0 = stay on the
+    single-device path).  ``C3O_CV_SHARD``: ``auto`` shards when the host
+    has more than one device, ``on`` forces the shard_map path (even over a
+    1-device mesh — the parity tests use this), ``off`` disables it."""
+    mode = os.environ.get("C3O_CV_SHARD", "auto").lower()
+    if mode == "off":
+        return 0
+    n = len(jax.devices())
+    if mode == "on":
+        return n
+    return n if n > 1 else 0
+
+
 def cache_stats() -> Dict[str, int]:
     """Executable-cache occupancy (introspection for tests/benchmarks)."""
     return {"fit": fit_executable.cache_info().currsize,
             "predict": predict_executable.cache_info().currsize,
-            "cv": cv_executable.cache_info().currsize}
+            "cv": cv_executable.cache_info().currsize,
+            "cv_sharded": cv_executable_sharded.cache_info().currsize,
+            "val": val_executable.cache_info().currsize}
 
 
 def cache_clear() -> None:
@@ -128,6 +283,8 @@ def cache_clear() -> None:
     fit_executable.cache_clear()
     predict_executable.cache_clear()
     cv_executable.cache_clear()
+    cv_executable_sharded.cache_clear()
+    val_executable.cache_clear()
 
 
 # --------------------------------------------------------------------------
@@ -179,7 +336,7 @@ def predict(spec: ModelSpec, params, X, aux) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 def cv_select(specs: Sequence[ModelSpec], X: np.ndarray, y: np.ndarray,
-              folds: np.ndarray
+              folds: np.ndarray, *, sharded: Optional[bool] = None
               ) -> Tuple[str, Dict[str, float], float, float]:
     """LOO-CV every model in one pipelined batch; returns
     (selected name, {name: mape}, resid mu, resid sigma of the selected).
@@ -187,21 +344,50 @@ def cv_select(specs: Sequence[ModelSpec], X: np.ndarray, y: np.ndarray,
     All models are dispatched before any host synchronization: the shared
     fold-weight matrix lives on device once, and each model's executable
     reduces MAPE/residual statistics on-device, so the only host traffic is
-    four scalars per model at the end.
+    a few scalars per model at the end.
+
+    With more than one device (or ``C3O_CV_SHARD=on``) the fold axis is
+    partitioned over a "cv" mesh via shard_map — see
+    ``cv_executable_sharded`` — with fold-weight buffers donated.  The
+    single-device path is the numerical reference; the sharded path matches
+    it to float tolerance (same selected model, allclose mape/mu/sigma).
+    ``sharded`` overrides the environment policy when not None.
     """
     X64 = np.asarray(X, np.float64)
     Xj = jnp.asarray(X64, jnp.float32)
     yj = jnp.asarray(y, jnp.float32)
-    fold_j = jnp.asarray(np.asarray(folds))
-    W = 1.0 - jax.nn.one_hot(fold_j, len(y))               # [F, n] shared
+    folds = np.asarray(folds)
+    n_dev = _cv_shard_devices() if sharded is None else \
+        (len(jax.devices()) if sharded else 0)
     pending = []
-    for spec in specs:
-        aux = spec.make_aux(X64)
-        pending.append((spec.name,
-                        cv_executable(spec)(Xj, yj, W, fold_j, aux)))
+    if n_dev:
+        F = len(folds)
+        pad = (-F) % n_dev
+        folds_p = np.concatenate([folds, np.zeros(pad, folds.dtype)])
+        valid = jnp.asarray(np.concatenate([np.ones(F, np.float32),
+                                            np.zeros(pad, np.float32)]))
+        fold_j = jnp.asarray(folds_p)
+        # off-CPU the executable donates its fold-weight buffer, so each
+        # spec needs a fresh [F_pad, n] matrix; on CPU donation is disabled
+        # and one shared W serves every spec
+        donating = jax.default_backend() != "cpu"
+        W_shared = None if donating else 1.0 - jax.nn.one_hot(fold_j, len(y))
+        for spec in specs:
+            aux = spec.make_aux(X64)
+            W = (1.0 - jax.nn.one_hot(fold_j, len(y))) if donating \
+                else W_shared
+            pending.append((spec.name, cv_executable_sharded(spec, n_dev)(
+                Xj, yj, W, fold_j, valid, aux)))
+    else:
+        fold_j = jnp.asarray(folds)
+        W = 1.0 - jax.nn.one_hot(fold_j, len(y))           # [F, n] shared
+        for spec in specs:
+            aux = spec.make_aux(X64)
+            pending.append((spec.name,
+                            cv_executable(spec)(Xj, yj, W, fold_j, aux)[:3]))
     mapes: Dict[str, float] = {}
     stats: Dict[str, Tuple[float, float]] = {}
-    for name, (mape, mu, sigma, _pred) in pending:          # single sync pass
+    for name, (mape, mu, sigma) in pending:                 # single sync pass
         mapes[name] = float(mape)
         stats[name] = (float(mu), float(sigma))
     best = min(mapes, key=mapes.get)        # ties: first in model order

@@ -1,17 +1,27 @@
-"""Feature schema and TSV codec for shared runtime data (paper §VI-A).
+"""Columnar feature schema and TSV codec for shared runtime data (paper §VI-A).
 
-Row layout follows the paper: machine type and scale-out first, job-specific
-context features after, runtime (seconds) last.  Column 0 of the encoded
-matrix is ALWAYS the scale-out (models such as the optimistic SSM depend on
-that convention); the machine type is a partition key, not a model feature
-(paper §VI-C: models only train on data from the target machine type).
+The runtime-data plane is a struct-of-arrays: machine codes (int32 indices
+into a small machine vocabulary), scale-outs, context features, and runtimes
+each live in their own contiguous array.  Row layout of the *assembled*
+feature matrix follows the paper: column 0 of ``X`` is ALWAYS the scale-out
+(models such as the optimistic SSM depend on that convention); the machine
+type is a partition key, not a model feature (paper §VI-C: models only train
+on data from the target machine type).
+
+Columnar storage is growable: ``append`` writes contributions into spare
+tail capacity (amortized doubling) instead of re-copying the whole store,
+and per-machine index views plus assembled-``X`` caches are carried forward
+incrementally so ``predictor_for`` -> engine dispatch re-uses one assembled
+batch per (machine, data version) without re-filtering.  TSV remains
+strictly an import/export format at the edges — the codec is vectorized
+(``np.loadtxt`` / ``np.char``) and never materializes Python row objects.
 """
 from __future__ import annotations
 
 import io
 from dataclasses import dataclass
 
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,54 +45,324 @@ class JobSchema:
         return ("machine_type",) + self.feature_names + ("runtime_s",)
 
 
-@dataclass
+class _Columns:
+    """Growable column buffers shared by ``RuntimeData`` frontier views.
+
+    ``used`` is the number of globally valid rows; each ``RuntimeData`` view
+    covers a prefix ``[:n]`` with ``n <= used``.  Rows are append-only —
+    existing rows are never mutated in place — so prefix views (and any
+    numpy slices handed out from them) stay valid across later appends and
+    buffer growth.
+    """
+
+    __slots__ = ("codes", "scale_out", "context", "runtime", "used")
+
+    def __init__(self, codes, scale_out, context, runtime):
+        self.codes = np.ascontiguousarray(codes, np.int32)
+        self.scale_out = np.ascontiguousarray(scale_out, np.float64)
+        self.context = np.ascontiguousarray(context, np.float64)
+        self.runtime = np.ascontiguousarray(runtime, np.float64)
+        self.used = len(self.codes)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.codes)
+
+    def grow(self, need: int) -> None:
+        """Reallocate to >= ``need`` rows (amortized doubling); valid rows
+        are copied, so views over the OLD buffers keep their contents."""
+        cap = max(8, 2 * self.capacity)
+        while cap < need:
+            cap *= 2
+        for name in ("codes", "scale_out", "runtime"):
+            old = getattr(self, name)
+            new = np.empty(cap, old.dtype)
+            new[:self.used] = old[:self.used]
+            setattr(self, name, new)
+        old = self.context
+        new = np.empty((cap, old.shape[1]), old.dtype)
+        new[:self.used] = old[:self.used]
+        self.context = new
+
+
 class RuntimeData:
-    """Rows of shared runtime data for one job."""
-    schema: JobSchema
-    machine_type: np.ndarray                 # [n] str
-    X: np.ndarray                            # [n, d] float64 (scale-out first)
-    y: np.ndarray                            # [n] float64 runtimes (seconds)
+    """Columnar runtime data for one job (struct-of-arrays).
+
+    Columns (all length ``n``):
+      ``codes``      int32 indices into the ``machines`` vocabulary
+      ``scale_out``  float64 number of nodes
+      ``context``    float64 [n, d-1] remaining features (data size + job
+                     context), in ``schema.feature_names[1:]`` order
+      ``runtime``    float64 measured runtime in seconds
+
+    ``machine_type`` / ``X`` / ``y`` are assembled-on-demand compatibility
+    views (cached); hot paths should consume the columns directly or go
+    through ``machine_view`` for the cached per-machine batch.
+    """
+
+    def __init__(self, schema: JobSchema, machine_type, X, y):
+        """Row-oriented compatibility constructor (decodes to columns)."""
+        X = np.asarray(X, np.float64)
+        if X.ndim != 2:
+            X = X.reshape(-1, schema.n_features)
+        mt = np.asarray(machine_type)
+        if len(mt):
+            machines, codes = np.unique(mt, return_inverse=True)
+            machines = tuple(str(m) for m in machines)
+        else:
+            machines, codes = (), np.empty(0, np.int32)
+        self._init(schema, machines,
+                   _Columns(codes, X[:, 0], X[:, 1:],
+                            np.asarray(y, np.float64)),
+                   len(codes))
+
+    def _init(self, schema, machines, cols, n):
+        self.schema = schema
+        self.machines = tuple(machines)
+        self._cols = cols
+        self._n = int(n)
+        self._mindex = {}            # machine -> row-index array (cached)
+        self._mview = {}             # machine -> RuntimeData (cached)
+        self._X = None               # assembled [n, d] cache
+
+    @classmethod
+    def from_columns(cls, schema: JobSchema, machines: Sequence[str],
+                     codes, scale_out, context, runtime) -> "RuntimeData":
+        """Zero-copy columnar constructor (arrays are adopted, not copied,
+        when already contiguous with the right dtype)."""
+        self = cls.__new__(cls)
+        context = np.asarray(context, np.float64)
+        if context.ndim != 2:
+            context = context.reshape(len(np.atleast_1d(scale_out)), -1)
+        cols = _Columns(codes, scale_out, context, runtime)
+        self._init(schema, machines, cols, cols.used)
+        return self
+
+    @classmethod
+    def empty(cls, schema: JobSchema) -> "RuntimeData":
+        k = schema.n_features - 1
+        return cls.from_columns(schema, (), np.empty(0, np.int32),
+                                np.empty(0), np.empty((0, k)), np.empty(0))
+
+    # ---------------- columns (views over the shared buffers) --------------
+    @property
+    def codes(self) -> np.ndarray:
+        return self._cols.codes[:self._n]
+
+    @property
+    def scale_out(self) -> np.ndarray:
+        return self._cols.scale_out[:self._n]
+
+    @property
+    def context(self) -> np.ndarray:
+        return self._cols.context[:self._n]
+
+    @property
+    def runtime(self) -> np.ndarray:
+        return self._cols.runtime[:self._n]
 
     def __len__(self) -> int:
-        return len(self.y)
+        return self._n
+
+    # ---------------- assembled compatibility views ------------------------
+    @property
+    def machine_type(self) -> np.ndarray:
+        """[n] machine-name strings (decoded from codes on demand)."""
+        if not self.machines:
+            return np.empty(self._n, dtype="<U1")
+        return np.asarray(self.machines)[self.codes]
+
+    @property
+    def X(self) -> np.ndarray:
+        """[n, d] float64 feature matrix, scale-out first (assembled once
+        and cached; views are append-safe, see ``_Columns``)."""
+        if self._X is None or len(self._X) != self._n:
+            self._X = assemble_X(self.scale_out, self.context)
+        return self._X
+
+    @property
+    def y(self) -> np.ndarray:
+        return self.runtime
+
+    @y.setter
+    def y(self, value) -> None:
+        """Replace runtimes (tests perturb contributions this way).  The
+        view detaches onto private buffers first so sibling views sharing
+        the columns are never mutated."""
+        self._detach()
+        self._cols.runtime = np.ascontiguousarray(value, np.float64)
+        assert len(self._cols.runtime) == self._n
+        self._mview = {}
+
+    def _detach(self) -> None:
+        if self._cols.used != self._n or self._cols.capacity != self._n:
+            self._cols = _Columns(self.codes.copy(), self.scale_out.copy(),
+                                  self.context.copy(), self.runtime.copy())
+        else:
+            self._cols = _Columns(self._cols.codes, self._cols.scale_out,
+                                  self._cols.context, self._cols.runtime)
+
+    # ---------------- per-machine index views ------------------------------
+    def machine_code(self, machine: str) -> int:
+        """Vocabulary index of ``machine`` (-1 when absent)."""
+        try:
+            return self.machines.index(machine)
+        except ValueError:
+            return -1
+
+    def present_machines(self) -> Tuple[str, ...]:
+        """Machine names present in the data, first-appearance order."""
+        codes, first = np.unique(self.codes, return_index=True)
+        order = np.argsort(first)
+        return tuple(self.machines[c] for c in codes[order])
+
+    def machine_indices(self, machine: str) -> np.ndarray:
+        """Row indices for one machine type (computed once, then carried
+        forward incrementally across ``append``)."""
+        idx = self._mindex.get(machine)
+        if idx is None:
+            code = self.machine_code(machine)
+            idx = np.nonzero(self.codes == code)[0] if code >= 0 \
+                else np.empty(0, np.int64)
+            self._mindex[machine] = idx
+        return idx
+
+    def machine_view(self, machine: str) -> "RuntimeData":
+        """Cached columnar batch for one machine type: repeated calls (the
+        ``predictor_for`` hot path) return the SAME object, so its assembled
+        ``X`` is built at most once per (machine, data version)."""
+        view = self._mview.get(machine)
+        if view is None:
+            view = self.subset(self.machine_indices(machine))
+            self._mview[machine] = view
+        return view
+
+    def _light_clone(self) -> "RuntimeData":
+        """Distinct object over the same columns (and shared ``X`` cache).
+        Mutating the clone's ``y`` detaches it onto private buffers, so the
+        original — e.g. the cached ``machine_view`` — is untouched."""
+        out = RuntimeData.__new__(RuntimeData)
+        out._init(self.schema, self.machines, self._cols, self._n)
+        out._X = self._X
+        out._mindex = dict(self._mindex)
+        return out
 
     def filter_machine(self, machine: str) -> "RuntimeData":
-        m = self.machine_type == machine
-        return RuntimeData(self.schema, self.machine_type[m], self.X[m],
-                           self.y[m])
+        """Per-machine rows, sharing storage with the cached view but safe
+        to perturb (the pre-refactor contract returned an independent copy;
+        callers may legitimately edit the result's runtimes)."""
+        return self.machine_view(machine)._light_clone()
 
+    # ---------------- subset / append --------------------------------------
     def subset(self, idx) -> "RuntimeData":
-        return RuntimeData(self.schema, self.machine_type[idx], self.X[idx],
-                           self.y[idx])
+        idx = np.asarray(idx)
+        return RuntimeData.from_columns(
+            self.schema, self.machines, self.codes[idx], self.scale_out[idx],
+            self.context[idx], self.runtime[idx])
+
+    def _merged_vocab(self, other: "RuntimeData"):
+        """(merged vocabulary, other's codes remapped into it)."""
+        machines = list(self.machines)
+        lut = {m: i for i, m in enumerate(machines)}
+        remap = np.empty(max(len(other.machines), 1), np.int32)
+        for j, m in enumerate(other.machines):
+            if m not in lut:
+                lut[m] = len(machines)
+                machines.append(m)
+            remap[j] = lut[m]
+        ocodes = remap[other.codes] if len(other) else other.codes
+        return tuple(machines), ocodes
+
+    def append(self, other: "RuntimeData") -> "RuntimeData":
+        """Columnar append in amortized O(len(other)).
+
+        When ``self`` is the frontier view of its buffers (nothing appended
+        past it yet), the delta is written into spare tail capacity and the
+        returned view shares storage; otherwise a compact copy is made.
+        ``self`` remains a valid, unchanged view either way.  Cached
+        per-machine indices are extended incrementally, not recomputed.
+        """
+        assert self.schema.job == other.schema.job
+        if len(other) == 0:
+            return self
+        machines, ocodes = self._merged_vocab(other)
+        m = len(other)
+        n = self._n
+        cols = self._cols
+        if cols.used != n or cols.context.shape[1] != other.context.shape[1]:
+            cols = _Columns(self.codes.copy(), self.scale_out.copy(),
+                            self.context.copy(), self.runtime.copy())
+        if n + m > cols.capacity:
+            cols.grow(n + m)
+        cols.codes[n:n + m] = ocodes
+        cols.scale_out[n:n + m] = other.scale_out
+        cols.context[n:n + m] = other.context
+        cols.runtime[n:n + m] = other.runtime
+        cols.used = n + m
+        out = RuntimeData.__new__(RuntimeData)
+        out._init(self.schema, machines, cols, n + m)
+        # carry cached per-machine indices forward with just the delta rows
+        for machine, pidx in self._mindex.items():
+            code = machines.index(machine) if machine in machines else -1
+            didx = np.nonzero(ocodes == code)[0] + n
+            out._mindex[machine] = (np.concatenate([pidx, didx])
+                                    if len(didx) else pidx)
+        return out
 
     def concat(self, other: "RuntimeData") -> "RuntimeData":
-        assert self.schema.job == other.schema.job
-        return RuntimeData(
-            self.schema,
-            np.concatenate([self.machine_type, other.machine_type]),
-            np.concatenate([self.X, other.X]),
-            np.concatenate([self.y, other.y]))
+        return self.append(other)
 
     # ---------------- TSV (the sharing format, paper §VI-A) ----------------
+    def tsv_lines(self) -> np.ndarray:
+        """Canonical per-row TSV lines (no header, no newlines) as a string
+        array — the unit of the datastore's chained fingerprint."""
+        if self._n == 0:
+            return np.empty(0, dtype=object)
+        out = self.machine_type.astype(object)
+        X = self.X
+        for j in range(X.shape[1]):
+            out = out + "\t" + np.char.mod("%.6g", X[:, j]).astype(object)
+        return out + "\t" + np.char.mod("%.4f", self.runtime).astype(object)
+
+    def tsv_delta_bytes(self) -> bytes:
+        """This view's rows in canonical TSV byte form (one trailing newline
+        per row) — what an append contributes to the fingerprint chain."""
+        lines = self.tsv_lines()
+        if not len(lines):
+            return b""
+        return ("\n".join(lines) + "\n").encode()
+
     def to_tsv(self) -> str:
-        buf = io.StringIO()
-        buf.write("\t".join(self.schema.columns) + "\n")
-        for mt, x, t in zip(self.machine_type, self.X, self.y):
-            vals = [mt] + [f"{v:.6g}" for v in x] + [f"{t:.4f}"]
-            buf.write("\t".join(vals) + "\n")
-        return buf.getvalue()
+        header = "\t".join(self.schema.columns) + "\n"
+        return header + self.tsv_delta_bytes().decode()
 
     @classmethod
     def from_tsv(cls, text: str, schema: JobSchema) -> "RuntimeData":
-        lines = [l for l in text.strip().splitlines() if l]
-        header = lines[0].split("\t")
+        lines = text.strip().splitlines()
+        header = lines[0].split("\t") if lines else []
         assert tuple(header) == schema.columns, \
             f"schema mismatch: {header} vs {schema.columns}"
-        mts, xs, ys = [], [], []
-        for line in lines[1:]:
-            parts = line.split("\t")
-            mts.append(parts[0])
-            xs.append([float(v) for v in parts[1:-1]])
-            ys.append(float(parts[-1]))
-        return cls(schema, np.asarray(mts), np.asarray(xs, np.float64),
-                   np.asarray(ys, np.float64))
+        body = [ln for ln in lines[1:] if ln]
+        if not body:
+            return cls.empty(schema)
+        arr = np.loadtxt(io.StringIO("\n".join(body)), dtype=str,
+                         delimiter="\t", ndmin=2, comments=None)
+        nums = arr[:, 1:].astype(np.float64)
+        machines, codes = np.unique(arr[:, 0], return_inverse=True)
+        return cls.from_columns(schema, tuple(str(m) for m in machines),
+                                codes, nums[:, 0], nums[:, 1:-1],
+                                nums[:, -1])
+
+
+def assemble_X(scale_out: np.ndarray, context: np.ndarray,
+               out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Assemble the [n, d] model feature matrix from columns (scale-out
+    first) — the one place the columnar plane flattens for the engine."""
+    scale_out = np.asarray(scale_out, np.float64)
+    context = np.atleast_2d(np.asarray(context, np.float64))
+    n, k = context.shape
+    if out is None:
+        out = np.empty((n, k + 1), np.float64)
+    out[:, 0] = scale_out
+    out[:, 1:] = context
+    return out

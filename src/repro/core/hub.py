@@ -8,6 +8,7 @@ API), and metadata for discovery on the hub.
 """
 from __future__ import annotations
 
+import logging
 import os
 import pickle
 from dataclasses import dataclass, field
@@ -50,9 +51,12 @@ class JobRepo:
                tuple(get_model(n) for n in self.model_names))
         pred = self._fit_cache.get(key)
         if pred is None:
-            d = self.store.data.filter_machine(machine_type)
+            # cached columnar machine view: the assembled (X, y) batch is
+            # built once per (machine, data version) and handed to the
+            # engine as-is — no per-call re-filter or row copies
+            d = self.store.data.machine_view(machine_type)
             pred = C3OPredictor(model_names=tuple(self.model_names),
-                                seed=seed).fit(d.X, d.y)
+                                seed=seed).fit_data(d)
             # stale versions can never be requested again: evict them
             self._fit_cache = {k: v for k, v in self._fit_cache.items()
                                if k[2] == self.store.version}
@@ -103,25 +107,43 @@ class JobRepo:
         """Warm-start the fit cache from a sidecar; returns how many entries
         were restored.  Entries are dropped (forcing a refit on demand) when
         the store content no longer matches the saved fingerprint, the model
-        list changed, or the selected model is no longer registered."""
+        list changed, or the selected model is no longer registered.  A
+        corrupt or unreadable sidecar (truncated write, bad pickle, foreign
+        format) is a CACHE MISS, not an error: it is logged and every
+        predictor refits on demand — a damaged cache file must never take
+        the hub down."""
         from repro.core.models.api import get_model
         from repro.core.predictor import C3OPredictor
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
-        if payload.get("format") != self.FITS_VERSION \
-                or payload.get("fingerprint") != self.store.fingerprint:
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+            entries = payload["entries"]
+            fingerprint = payload.get("fingerprint")
+            fmt = payload.get("format")
+        except Exception as e:           # noqa: BLE001 — any damage = miss
+            logging.getLogger(__name__).warning(
+                "fit-cache sidecar %s unreadable (%s: %s); refitting on "
+                "demand", path, type(e).__name__, e)
+            return 0
+        if fmt != self.FITS_VERSION or fingerprint != self.store.fingerprint:
             return 0
         restored = 0
-        for e in payload["entries"]:
-            if tuple(e["model_names"]) != tuple(self.model_names):
-                continue
+        for e in entries:
             try:
+                if tuple(e["model_names"]) != tuple(self.model_names):
+                    continue
                 specs = tuple(get_model(n) for n in self.model_names)
-                d = self.store.data.filter_machine(e["machine_type"])
+                d = self.store.data.machine_view(e["machine_type"])
                 pred = C3OPredictor.from_state(e["state"], d.X)
-            except KeyError:             # a model left the registry
+                key = (e["machine_type"], e["seed"], self.store.version,
+                       specs)
+            except KeyError:             # a model left the registry, or a
+                continue                 # malformed entry: skip, refit later
+            except Exception as exc:     # noqa: BLE001
+                logging.getLogger(__name__).warning(
+                    "fit-cache entry in %s unusable (%s: %s); skipping",
+                    path, type(exc).__name__, exc)
                 continue
-            key = (e["machine_type"], e["seed"], self.store.version, specs)
             self._fit_cache[key] = pred
             restored += 1
         return restored

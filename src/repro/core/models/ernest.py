@@ -15,7 +15,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.models.api import ModelSpec, register_model
 

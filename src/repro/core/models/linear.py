@@ -3,9 +3,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.models.api import ModelSpec, register_model
 

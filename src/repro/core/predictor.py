@@ -37,6 +37,13 @@ class C3OPredictor:
     mu: float = 0.0
     sigma: float = 0.0
 
+    def fit_data(self, data) -> "C3OPredictor":
+        """Fit from a columnar ``RuntimeData`` view (typically a cached
+        ``machine_view``): the assembled feature batch is adopted as-is —
+        ``data.X`` is built once per (machine, data version) and reused by
+        every dispatch downstream."""
+        return self.fit(data.X, data.y)
+
     def fit(self, X: np.ndarray, y: np.ndarray) -> "C3OPredictor":
         X = np.asarray(X, np.float64)
         y = np.asarray(y, np.float64)

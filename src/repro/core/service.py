@@ -58,11 +58,16 @@ class ConfigurationService:
         validate_confidence(self.confidence)
 
     @classmethod
-    def from_repo(cls, repo, machine_types: Sequence[str],
+    def from_repo(cls, repo, machine_types: Optional[Sequence[str]],
                   prices: Dict[str, float], scaleouts: Sequence[int],
                   seed: int = 0, **kw) -> "ConfigurationService":
         """Build from a hub JobRepo: one (cached, possibly warm-started)
-        predictor per machine type via ``repo.predictor_for``."""
+        predictor per machine type via ``repo.predictor_for``.  With
+        ``machine_types=None`` the store's columnar machine vocabulary
+        decides — every machine type with shared runtime data gets a
+        predictor."""
+        if machine_types is None:
+            machine_types = repo.store.data.present_machines()
         preds = {m: repo.predictor_for(m, seed=seed) for m in machine_types}
         return cls(preds, prices, scaleouts, **kw)
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -47,7 +46,7 @@ def abstract_batch(cfg: ModelConfig, shape: ShapeConfig):
 
 def abstract_state(cfg: ModelConfig):
     params = M.abstract_params(cfg)
-    opt = get_optimizer(cfg.optimizer)
+    get_optimizer(cfg.optimizer)      # validates the optimizer name
     f32 = jnp.float32
 
     def opt_leaf_adamw(p):

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ATTN_LOCAL
 from repro.distributed import sharding
-from repro.modeling.layers import ParamDef, apply_rope, rope_freqs, softcap
+from repro.modeling.layers import ParamDef, apply_rope, rope_freqs
 
 NEG_INF = -2.0e38
 
@@ -151,7 +151,7 @@ def attention_blocked(q, k, v, *, q_pos, k_pos, causal=True, window=0, cap=0.0,
     pc = k_pos.reshape(n, chunk)
 
     def step(carry, xs):
-        m, l, acc = carry
+        m, den, acc = carry
         kj, vj, pj = xs
         s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kj).astype(jnp.float32)
         if cap:
@@ -160,16 +160,16 @@ def attention_blocked(q, k, v, *, q_pos, k_pos, causal=True, window=0, cap=0.0,
         m_new = jnp.maximum(m, s.max(axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l = l * corr + p.sum(axis=-1)
+        den = den * corr + p.sum(axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bkgqs,bskh->bkgqh", p.astype(vj.dtype), vj).astype(jnp.float32)
-        return (m_new, l, acc), None
+        return (m_new, den, acc), None
 
     m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
     a0 = jnp.zeros((B, KV, G, Sq, hv), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
-    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, den, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(den, 1e-30)[..., None]
     return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hv).astype(v.dtype)
 
 
@@ -434,7 +434,6 @@ def _mla_apply(cfg: ModelConfig, p, x, *, mode, pos0, cache):
     from repro.modeling.layers import rms_norm
     B, S, D = x.shape
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    H = cfg.n_heads
     cap = cfg.attn_logit_softcap
     scale = (nd + rd) ** -0.5
 

@@ -110,8 +110,15 @@ class AsyncConfigService:
                         batch.append(self._queue.get_nowait())
                     except asyncio.QueueEmpty:
                         break
-                contexts = np.stack([b[0] for b in batch])
-                t_max = np.asarray([b[1] for b in batch])
+                # pack the micro-batch columnar: one [C, k] context block +
+                # one [C] deadline vector, written into fresh arrays the
+                # service consumes without further copies
+                contexts = np.empty((len(batch), len(batch[0][0])),
+                                    np.float64)
+                t_max = np.empty(len(batch), np.float64)
+                for i, (ctx, tm, _) in enumerate(batch):
+                    contexts[i] = ctx
+                    t_max[i] = tm
                 try:
                     choices = self.service.choose_cluster_batch(contexts,
                                                                 t_max)

@@ -37,7 +37,8 @@ def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.01,
           max_grad_norm: float = 1.0) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params),
                 "count": jnp.zeros((), jnp.int32)}

@@ -191,15 +191,28 @@ def job_design(job: str, seed: int = 7) -> List[Tuple[str, float, Tuple]]:
 
 
 def generate_job_data(job: str, seed: int = 0) -> RuntimeData:
+    """Emulated dataset, assembled straight into the columnar layout.
+
+    The measurement loop is inherently per-configuration (each cell's noise
+    stream is seeded from its identity hash), but the columns are written
+    into preallocated arrays and adopted zero-copy by ``from_columns`` —
+    no intermediate Python row lists."""
     schema = SCHEMAS[job]
     design = job_design(job)
-    mts, xs, ys = [], [], []
-    for machine, s, cell in design:
-        mts.append(machine)
-        xs.append([s, *cell])
-        ys.append(_measure(job, machine, s, cell, seed))
-    return RuntimeData(schema, np.asarray(mts), np.asarray(xs, np.float64),
-                       np.asarray(ys, np.float64))
+    machines = tuple(MACHINES)
+    code_of = {m: i for i, m in enumerate(machines)}
+    n = len(design)
+    codes = np.empty(n, np.int32)
+    scale_out = np.empty(n, np.float64)
+    context = np.empty((n, schema.n_features - 1), np.float64)
+    runtime = np.empty(n, np.float64)
+    for i, (machine, s, cell) in enumerate(design):
+        codes[i] = code_of[machine]
+        scale_out[i] = s
+        context[i] = cell
+        runtime[i] = _measure(job, machine, s, cell, seed)
+    return RuntimeData.from_columns(schema, machines, codes, scale_out,
+                                    context, runtime)
 
 
 def generate_all(seed: int = 0) -> Dict[str, RuntimeData]:
@@ -207,8 +220,11 @@ def generate_all(seed: int = 0) -> Dict[str, RuntimeData]:
 
 
 def context_groups(data: RuntimeData) -> List[np.ndarray]:
-    """Index sets sharing all context features (the paper's 'local' sets)."""
-    ctx = data.X[:, 2:]
+    """Index sets sharing all context features (the paper's 'local' sets).
+
+    Operates on the context column block directly (column 0 of ``context``
+    is the dataset size — a base feature, not a grouping key)."""
+    ctx = data.context[:, 1:]
     if ctx.shape[1] == 0:
         return [np.arange(len(data))]
     _, gid = np.unique(np.round(ctx, 9), axis=0, return_inverse=True)

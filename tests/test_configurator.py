@@ -70,7 +70,9 @@ def test_higher_confidence_needs_no_smaller_scaleout(c1, c2):
 
 def test_bottleneck_scaleouts_avoided():
     pred = _FakePredictor(sigma=1.0)
-    bott = lambda ctx, s: s <= 4            # low scale-outs thrash memory
+
+    def bott(ctx, s):
+        return s <= 4                       # low scale-outs thrash memory
     conf = Configurator(pred, "m5.xlarge", PRICES, SCALEOUTS,
                         bottleneck_fn=bott)
     choice = conf.choose_scaleout(np.asarray([15.0]), t_max=2000.0)

@@ -1,0 +1,307 @@
+"""Columnar runtime-data plane: struct-of-arrays semantics, TSV round-trip
+fidelity, incremental ingestion (chained fingerprint, amortized append),
+corrupt fit-cache sidecars, and device-sharded CV parity."""
+import hashlib
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.datastore import RuntimeDataStore
+from repro.core.features import JobSchema, RuntimeData
+from repro.core.hub import JobRepo
+from repro.core.models.api import get_model
+from repro.workloads import spark_emul as W
+
+
+@pytest.fixture(scope="module")
+def grep_data():
+    return W.generate_job_data("grep")
+
+
+# --------------------------------------------------------------------------
+# columnar layout + TSV round-trip fidelity
+# --------------------------------------------------------------------------
+
+def test_columnar_layout_and_dtypes(grep_data):
+    d = grep_data
+    assert d.codes.dtype == np.int32
+    assert d.scale_out.dtype == np.float64
+    assert d.context.dtype == np.float64 and d.context.ndim == 2
+    assert d.runtime.dtype == np.float64
+    assert d.context.shape == (len(d), d.schema.n_features - 1)
+    # assembled X preserves the scale-out-first convention
+    np.testing.assert_array_equal(d.X[:, 0], d.scale_out)
+    np.testing.assert_array_equal(d.X[:, 1:], d.context)
+    # machine decode round-trips through the vocabulary
+    assert set(d.machines) == set(W.MACHINES)
+    for m in d.machines:
+        np.testing.assert_array_equal(
+            d.machine_indices(m), np.nonzero(d.machine_type == m)[0])
+
+
+def test_tsv_roundtrip_fidelity_mixed_machines(grep_data):
+    """Round-trip preserves row ORDER, dtypes, and machine partition even
+    with interleaved machine types."""
+    rng = np.random.default_rng(0)
+    shuffled = grep_data.subset(rng.permutation(len(grep_data)))
+    text = shuffled.to_tsv()
+    back = RuntimeData.from_tsv(text, shuffled.schema)
+    assert back.X.dtype == np.float64 and back.y.dtype == np.float64
+    np.testing.assert_allclose(back.X, shuffled.X)           # order kept
+    np.testing.assert_allclose(back.y, shuffled.y, rtol=1e-4)
+    assert (back.machine_type == shuffled.machine_type).all()
+    # re-encoding the decoded data is byte-identical (stable canonical form)
+    assert back.to_tsv() == text
+
+
+def test_tsv_roundtrip_empty_and_single_row(grep_data):
+    empty = RuntimeData.empty(grep_data.schema)
+    assert len(empty) == 0
+    back = RuntimeData.from_tsv(empty.to_tsv(), grep_data.schema)
+    assert len(back) == 0
+    one = grep_data.subset(np.asarray([7]))
+    back1 = RuntimeData.from_tsv(one.to_tsv(), grep_data.schema)
+    assert len(back1) == 1
+    np.testing.assert_allclose(back1.X, one.X)
+
+
+def test_append_is_view_safe_and_incremental(grep_data):
+    base = grep_data.subset(np.arange(50))
+    x_before = base.X.copy()
+    idx_before = base.machine_indices("m5.xlarge").copy()
+    delta = grep_data.subset(np.arange(50, 80))
+    grown = base.append(delta)
+    assert len(grown) == 80 and len(base) == 50      # base view unchanged
+    np.testing.assert_array_equal(base.X, x_before)
+    np.testing.assert_array_equal(base.machine_indices("m5.xlarge"),
+                                  idx_before)
+    np.testing.assert_allclose(grown.X[:50], base.X)
+    np.testing.assert_allclose(grown.X[50:], delta.X)
+    # cached per-machine indices were carried forward, not recomputed wrong
+    np.testing.assert_array_equal(
+        grown.machine_indices("m5.xlarge"),
+        np.nonzero(grown.machine_type == "m5.xlarge")[0])
+    # appending introduces vocabulary on demand
+    other = RuntimeData(base.schema, np.asarray(["z9.new"] * 2),
+                        base.X[:2], base.y[:2])
+    merged = grown.append(other)
+    assert "z9.new" in merged.machines
+    assert (merged.machine_type[-2:] == "z9.new").all()
+
+
+def test_machine_view_is_cached(grep_data):
+    v1 = grep_data.machine_view("m5.xlarge")
+    v2 = grep_data.machine_view("m5.xlarge")
+    assert v1 is v2
+    x1 = v1.X
+    assert v1.X is x1                 # assembled batch built exactly once
+
+
+def test_filter_machine_result_is_safe_to_mutate(grep_data):
+    """Perturbing a filter_machine result (the documented contribution-
+    crafting pattern) must not poison the cached machine view."""
+    data = grep_data.subset(np.arange(len(grep_data)))   # private copy
+    before = data.machine_view("m5.xlarge").y.copy()
+    d = data.filter_machine("m5.xlarge")
+    d.y = d.y * 40.0
+    np.testing.assert_array_equal(data.machine_view("m5.xlarge").y, before)
+    np.testing.assert_array_equal(data.filter_machine("m5.xlarge").y, before)
+
+
+def test_tsv_roundtrip_hash_in_machine_name(grep_data):
+    """'#' in a machine name must survive the codec (np.loadtxt would treat
+    it as a comment marker without comments=None)."""
+    schema = grep_data.schema
+    d = RuntimeData(schema, np.asarray(["node#1", "node#2", "node#1"]),
+                    grep_data.X[:3], grep_data.y[:3])
+    back = RuntimeData.from_tsv(d.to_tsv(), schema)
+    assert (back.machine_type == d.machine_type).all()
+    np.testing.assert_allclose(back.X, d.X)
+
+
+# --------------------------------------------------------------------------
+# incremental ingestion: chained fingerprint + store growth
+# --------------------------------------------------------------------------
+
+def test_fingerprint_chain_matches_full_rehash(grep_data):
+    rng = np.random.default_rng(1)
+    idx = rng.permutation(len(grep_data))
+    store = RuntimeDataStore(grep_data.subset(idx[:120]))
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+    for lo, hi in ((120, 135), (135, 150)):
+        rep = store.contribute(grep_data.subset(idx[lo:hi]))
+        assert rep.accepted
+        # the chained O(delta) digest equals a full O(N) re-hash, so
+        # persisted fit caches keyed on it stay valid across processes
+        assert store.fingerprint == hashlib.sha256(
+            store.data.to_tsv().encode()).hexdigest()
+    assert store.version == 2
+    # and save/load preserves it
+    assert RuntimeDataStore(
+        RuntimeData.from_tsv(store.data.to_tsv(), grep_data.schema)
+    ).fingerprint == store.fingerprint
+
+
+def test_data_reassignment_reseeds_fingerprint(grep_data):
+    """Replacing store.data wholesale (an edge-format import, a manual
+    repair) must re-derive the fingerprint from the new content — a stale
+    chain would let an old fits sidecar pass its fingerprint check."""
+    store = RuntimeDataStore(grep_data)
+    store.data = grep_data.subset(np.arange(50))
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+
+
+def test_empty_contribution_rejected_without_version_bump(grep_data):
+    store = RuntimeDataStore(grep_data)
+    fp0, v0, n0 = store.fingerprint, store.version, len(store)
+    rep = store.contribute(RuntimeData.empty(grep_data.schema))
+    assert not rep.accepted
+    assert "empty contribution" in rep.reason
+    assert store.version == v0 and store.fingerprint == fp0
+    assert len(store) == n0
+
+
+# --------------------------------------------------------------------------
+# corrupt fit-cache sidecar = cache miss
+# --------------------------------------------------------------------------
+
+def _repo_with_saved_fits(data, tmp_path):
+    store = RuntimeDataStore(data, seed=0)
+    repo = JobRepo("grep", "grep", data.schema, store)
+    repo.predictor_for("m5.xlarge")
+    fits = JobRepo.fits_path(str(tmp_path / "grep.tsv"))
+    assert repo.save_fits(fits) == 1
+    return store, fits
+
+
+def test_load_fits_truncated_pickle_is_cache_miss(tmp_path, grep_data,
+                                                  caplog):
+    store, fits = _repo_with_saved_fits(grep_data, tmp_path)
+    with open(fits, "rb") as f:
+        blob = f.read()
+    with open(fits, "wb") as f:
+        f.write(blob[: len(blob) // 2])          # simulate a torn write
+    repo2 = JobRepo("grep", "grep", grep_data.schema,
+                    RuntimeDataStore(grep_data, seed=0))
+    with caplog.at_level("WARNING", logger="repro.core.hub"):
+        assert repo2.load_fits(fits) == 0        # miss, not an exception
+    assert any("unreadable" in r.message for r in caplog.records)
+    assert repo2.predictor_for("m5.xlarge").selected  # refit still works
+
+
+def test_load_fits_garbage_and_missing_file_are_cache_misses(tmp_path,
+                                                             grep_data):
+    repo = JobRepo("grep", "grep", grep_data.schema,
+                   RuntimeDataStore(grep_data, seed=0))
+    assert repo.load_fits(str(tmp_path / "does_not_exist.pkl")) == 0
+    bad = str(tmp_path / "garbage.pkl")
+    with open(bad, "wb") as f:
+        f.write(b"\x80\x04 this is not a pickle")
+    assert repo.load_fits(bad) == 0
+    import pickle
+    with open(bad, "wb") as f:
+        pickle.dump({"format": 1, "not_entries": []}, f)   # wrong structure
+    assert repo.load_fits(bad) == 0
+
+
+# --------------------------------------------------------------------------
+# sharded cross-validation parity
+# --------------------------------------------------------------------------
+
+def test_cv_select_sharded_matches_single_device(grep_data):
+    """shard_map path (forced, over the available mesh) == plain path:
+    same selected model, allclose mape/mu/sigma."""
+    d = grep_data.machine_view("m5.xlarge")
+    specs = [get_model(n) for n in ("ernest", "gbm", "bom", "ogb")]
+    rng = np.random.default_rng(0)
+    for n_folds in (20, 23):             # 23: exercises fold padding
+        folds = rng.choice(len(d.y), n_folds, replace=False)
+        ref = engine.cv_select(specs, d.X, d.y, folds, sharded=False)
+        sh = engine.cv_select(specs, d.X, d.y, folds, sharded=True)
+        assert sh[0] == ref[0]
+        for name in ref[1]:
+            np.testing.assert_allclose(sh[1][name], ref[1][name],
+                                       rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(sh[2], ref[2], rtol=2e-5, atol=1e-5)
+        np.testing.assert_allclose(sh[3], ref[3], rtol=2e-5, atol=1e-5)
+
+
+_MULTIDEV_SCRIPT = """
+import numpy as np
+from repro.core import engine
+from repro.core.models.api import get_model
+from repro.workloads import spark_emul as W
+import jax
+assert len(jax.devices()) == 4, jax.devices()
+d = W.generate_job_data("grep").machine_view("m5.xlarge")
+specs = [get_model(n) for n in ("ernest", "gbm", "bom", "ogb")]
+folds = np.random.default_rng(0).choice(len(d.y), 22, replace=False)
+ref = engine.cv_select(specs, d.X, d.y, folds, sharded=False)
+sh = engine.cv_select(specs, d.X, d.y, folds)      # auto: 4 devices -> shard
+assert engine._cv_shard_devices() == 4
+assert sh[0] == ref[0]
+for name in ref[1]:
+    np.testing.assert_allclose(sh[1][name], ref[1][name], rtol=2e-5,
+                               atol=1e-6)
+np.testing.assert_allclose(sh[2:], ref[2:], rtol=2e-5, atol=1e-5)
+print("MULTIDEV_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_cv_select_parity_on_four_forced_host_devices():
+    """End-to-end mesh parity on a real 4-device partition (forced host
+    devices in a subprocess: the flag must be set before jax initializes)."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"),
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIDEV_PARITY_OK" in out.stdout
+
+
+def test_predictor_fit_uses_sharded_path_transparently(grep_data,
+                                                       monkeypatch):
+    """C3OPredictor.fit through C3O_CV_SHARD=on equals the default path."""
+    from repro.core.predictor import C3OPredictor
+    d = grep_data.machine_view("m5.xlarge")
+    monkeypatch.setenv("C3O_CV_SHARD", "off")
+    ref = C3OPredictor(max_cv_folds=15).fit_data(d)
+    monkeypatch.setenv("C3O_CV_SHARD", "on")
+    sh = C3OPredictor(max_cv_folds=15).fit_data(d)
+    assert sh.selected == ref.selected
+    np.testing.assert_allclose(sh.mu, ref.mu, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(sh.sigma, ref.sigma, rtol=2e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# validation reuses engine executables (no throwaway predictors)
+# --------------------------------------------------------------------------
+
+def test_validation_runs_on_cached_val_executables(grep_data):
+    engine.cache_clear()
+    store = RuntimeDataStore(grep_data)
+    rng = np.random.default_rng(3)
+    idx = rng.permutation(len(grep_data))
+    store.validate(grep_data.subset(idx[:10]))
+    stats = engine.cache_stats()
+    assert stats["val"] >= 1            # fused fit+holdout executables...
+    assert stats["cv"] == 0             # ...no CV predictor construction
+    # second validation re-uses them (no growth in the executable cache)
+    store.validate(grep_data.subset(idx[10:20]))
+    assert engine.cache_stats()["val"] == stats["val"]
+
+
+def test_schema_mismatch_still_raises(grep_data):
+    other = JobSchema("sort", ())
+    with pytest.raises(AssertionError, match="schema mismatch"):
+        RuntimeData.from_tsv(grep_data.to_tsv(), other)

@@ -1,8 +1,6 @@
 """Prediction-engine contracts: no retracing across repeated fits/predicts,
 batched choose_batch parity with scalar choose_scaleout, version-keyed hub
 fit caching, and Pallas GBM-kernel routing parity."""
-import os
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
