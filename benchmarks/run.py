@@ -12,6 +12,8 @@ inner evaluation where meaningful; derived = headline metric).
   ingest        contribution ingestion at 10k stored rows: contributions/s
                 and rows/s, cold vs warm, vs the pre-refactor
                 re-encode/re-hash/refit-from-scratch path
+  eval          collaborative replay plane smoke: leave-one-user-out mini
+                replay wall-clock + per-job accuracy/monotonicity summary
   table1        dataset structure vs paper Table I
   table2        MAPE local/global x 5 jobs x {ernest,gbm,bom,ogb,c3o} (§VI-C.a)
   fig5          MAPE vs training-set size (§VI-C.b)
@@ -245,6 +247,35 @@ def bench_ingest(args):
          "(target >=10x)")
 
 
+def bench_eval(args):
+    """Collaborative replay plane: wall-clock and accuracy summary.
+
+    A small leave-one-user-out replay (4 users, grep + sort) — enough
+    contributions for real trajectories while staying CI-smoke sized.
+    Reports per-checkpoint cost, each job's C3O final MAPE vs the
+    optimistic/linear baselines, and quartile-median monotonicity; the
+    full-scale run is ``python -m repro.eval.replay --users 8``.
+    """
+    from repro.eval.replay import ReplayConfig, run_replay
+
+    cfg = ReplayConfig(jobs=("grep", "sort"), n_users=4, seed=0,
+                       chunks_per_user=2)
+    res = run_replay(cfg)
+    checkpoints = len({(r["job"], r["held_out"], r["step"])
+                       for r in res.records})
+    _row("eval.replay", res.wall_s / max(checkpoints, 1) * 1e6,
+         f"users={cfg.n_users} jobs={len(cfg.jobs)} "
+         f"checkpoints={checkpoints} rows={len(res.records)} "
+         f"accepted={res.accepted}/{res.contributions} "
+         f"fingerprint={res.fingerprint[:12]} wall_s={res.wall_s:.1f}")
+    for job, s in res.summary.items():
+        best_base = min(s["baselines"].values())
+        _row(f"eval.{job}", res.wall_s * 1e6 / max(checkpoints, 1),
+             f"c3o_final={s['c3o_final']:.4f} "
+             f"best_baseline={best_base:.4f} monotone={s['monotone']} "
+             f"quartiles={'>'.join(f'{q:.3f}' for q in s['quartile_medians'])}")
+
+
 def bench_table1(args):
     from repro.workloads import spark_emul as W
     t0 = time.time()
@@ -419,6 +450,7 @@ BENCHES = {
     "engine": bench_engine,
     "serve": bench_serve,
     "ingest": bench_ingest,
+    "eval": bench_eval,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig5": bench_fig5,

@@ -39,6 +39,24 @@ class ValidationReport:
     reason: str = ""
 
 
+def _waterfill(parts: Sequence[np.ndarray], cap: int) -> np.ndarray:
+    """Concatenate prefix samples of ``parts`` under a total row cap.
+
+    Water-filling allocation: groups are visited smallest-first and each
+    receives ``min(len(group), remaining_cap // remaining_groups)`` rows, so
+    small (rare-machine) groups keep ALL their rows while large groups share
+    whatever budget is left.  Each part is pre-permuted by the caller, so a
+    prefix is a uniform subsample of that group."""
+    out = []
+    cap = int(cap)
+    for i, p in enumerate(sorted(parts, key=len)):
+        take = min(len(p), cap // (len(parts) - i))
+        out.append(p[:take])
+        cap -= take
+    return (np.concatenate(out) if out
+            else np.empty(0, np.int64))
+
+
 class RuntimeDataStore:
     """One shared store per (job, repository)."""
 
@@ -130,6 +148,27 @@ class RuntimeDataStore:
         return engine.holdout_mape(self._model_specs(), tr.X, tr.y,
                                    te.X, te.y)
 
+    def _stratified_split(self, rng) -> tuple:
+        """Stratified-by-machine (holdout, train) index split.
+
+        Each machine-type group is permuted independently and split 20/80,
+        then each side is capped at ``max_validation_rows`` by water-filling
+        (see ``_waterfill``): rare machine types keep all of their rows
+        while frequent ones share the remaining budget.  A uniform
+        permutation of the whole store (the previous scheme) could starve a
+        rare machine below the 2-holdout/5-train minimum ``_mape`` needs,
+        silently waving its contributions through unvalidated."""
+        data = self.data
+        holds, trains = [], []
+        for m in data.present_machines():
+            g = data.machine_indices(m)
+            g = g[rng.permutation(len(g))]
+            k = min(max(2, len(g) // 5), len(g))
+            holds.append(g[:k])
+            trains.append(g[k:])
+        return (_waterfill(holds, self.max_validation_rows),
+                _waterfill(trains, self.max_validation_rows))
+
     def validate(self, contribution: RuntimeData,
                  machine: Optional[str] = None) -> ValidationReport:
         """Validate EVERY machine type present in the contribution.
@@ -151,13 +190,7 @@ class RuntimeDataStore:
         rng = np.random.default_rng(self.seed)
         machines = ([machine] if machine is not None
                     else list(contribution.present_machines()))
-        n = len(self.data)
-        idx = rng.permutation(n)
-        # both splits are capped so validation cost stays flat as the store
-        # grows — only the train side below ever feeds an O(n^2) model aux,
-        # but an uncapped holdout would still pay O(N) predictions per call
-        hold = idx[: max(2, n // 5)][: self.max_validation_rows]
-        rest = idx[max(2, n // 5):][: self.max_validation_rows]
+        hold, rest = self._stratified_split(rng)
         test = self.data.subset(hold)
         train = self.data.subset(rest)
         # the candidate set keeps the FULL contribution on top of the capped

@@ -32,10 +32,11 @@ Cache keys
     ``C3OPredictor`` instances.
 
 ``val_executable(spec)``
-    Fused fit + masked holdout-MAPE for contribution validation
-    (``RuntimeDataStore``): inputs are zero-padded to power-of-two row
-    buckets, so validating against a store that grows row by row keeps
-    hitting the same compiled executable.
+    Fused fit + masked holdout (MAPE, MAE) for contribution validation
+    (``RuntimeDataStore``) and the evaluation replay plane's per-model
+    error trajectories (``holdout_errors``): inputs are zero-padded to
+    power-of-two row buckets, so evaluating against a store that grows row
+    by row keeps hitting the same compiled executable.
 
 ``cv_executable_sharded(spec, n_devices)``
     LOO-CV with the fold axis partitioned over a one-dimensional "cv" mesh
@@ -106,23 +107,25 @@ def predict_executable(spec: ModelSpec):
 
 @functools.lru_cache(maxsize=None)
 def val_executable(spec: ModelSpec):
-    """Cached jitted fused fit+holdout-MAPE for one model.
+    """Cached jitted fused fit + holdout-error for one model.
 
-    (X_tr, y_tr, w, X_te, y_te, valid, aux) -> scalar MAPE on the valid
-    rows of the held-out split; the contribution validator dispatches every
-    pool model through this (one executable per spec, shared process-wide)
-    instead of constructing a throwaway CV predictor per call.  ``w`` and
-    ``valid`` are 0/1 masks so callers can pad both splits to bucketed
-    shapes — XLA then keeps one executable per bucket, not one per exact
-    store size.
+    (X_tr, y_tr, w, X_te, y_te, valid, aux) -> (MAPE, MAE) on the valid
+    rows of the held-out split; the contribution validator and the
+    evaluation replay plane dispatch every pool model through this (one
+    executable per spec, shared process-wide) instead of constructing a
+    throwaway CV predictor per call.  ``w`` and ``valid`` are 0/1 masks so
+    callers can pad both splits to bucketed shapes — XLA then keeps one
+    executable per bucket, not one per exact store size.
     """
 
     def _val(X_tr, y_tr, w, X_te, y_te, valid, aux):
         params = spec.fit(X_tr, y_tr, w, aux)
         pred = spec.predict(params, X_te, aux)
         pred = jnp.nan_to_num(pred, nan=1e12, posinf=1e12, neginf=-1e12)
-        ape = jnp.abs(pred - y_te) / jnp.maximum(jnp.abs(y_te), 1e-9)
-        return (ape * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+        err = jnp.abs(pred - y_te)
+        cnt = jnp.maximum(valid.sum(), 1.0)
+        ape = err / jnp.maximum(jnp.abs(y_te), 1e-9)
+        return (ape * valid).sum() / cnt, (err * valid).sum() / cnt
 
     return jax.jit(_val)
 
@@ -136,15 +139,23 @@ def _bucket(n: int, lo: int = 32) -> int:
     return b
 
 
-def holdout_mape(specs: Sequence[ModelSpec], X_tr: np.ndarray,
-                 y_tr: np.ndarray, X_te: np.ndarray,
-                 y_te: np.ndarray) -> float:
-    """Best (lowest) held-out MAPE over the model pool, one fused dispatch
-    per model and a single host sync at the end.
+def bucket_rows(n: int, lo: int = 32) -> int:
+    """Public row-bucketing policy (``C3OPredictor(pad_rows=True)`` and the
+    evaluation replay plane pad training batches to this)."""
+    return _bucket(n, lo)
+
+
+def holdout_errors(specs: Sequence[ModelSpec], X_tr: np.ndarray,
+                   y_tr: np.ndarray, X_te: np.ndarray,
+                   y_te: np.ndarray) -> Dict[str, Tuple[float, float]]:
+    """Held-out (MAPE, MAE) per model, one fused dispatch per model and a
+    single host sync at the end — the batched primitive behind both
+    contribution validation and the evaluation replay plane's per-model
+    error trajectories.
 
     Inputs are zero-padded to power-of-two row buckets with 0-weight /
     invalid masks (every pool model fits weighted, so w=0 rows are inert):
-    repeated validations against a growing store hit the SAME compiled
+    repeated evaluations against a growing store hit the SAME compiled
     executable instead of retracing per store size.
     """
     X_tr64 = np.asarray(X_tr, np.float64)
@@ -165,22 +176,35 @@ def holdout_mape(specs: Sequence[ModelSpec], X_tr: np.ndarray,
     Xtr, ytr = jnp.asarray(Xp, jnp.float32), jnp.asarray(yp)
     Xte, yte = jnp.asarray(Xq, jnp.float32), jnp.asarray(yq)
     wj, vj = jnp.asarray(w), jnp.asarray(valid)
-    pending = [val_executable(spec)(Xtr, ytr, wj, Xte, yte, vj,
-                                    spec.make_aux(Xp))
+    pending = [(spec.name, val_executable(spec)(Xtr, ytr, wj, Xte, yte, vj,
+                                                spec.make_aux(Xp)))
                for spec in specs]
-    return float(min(float(m) for m in pending))
+    return {name: (float(mape), float(mae))
+            for name, (mape, mae) in pending}              # single sync pass
+
+
+def holdout_mape(specs: Sequence[ModelSpec], X_tr: np.ndarray,
+                 y_tr: np.ndarray, X_te: np.ndarray,
+                 y_te: np.ndarray) -> float:
+    """Best (lowest) held-out MAPE over the model pool (§III-C.b
+    contribution validation consumes exactly this scalar)."""
+    errs = holdout_errors(specs, X_tr, y_tr, X_te, y_te)
+    return min(mape for mape, _ in errs.values())
 
 
 @functools.lru_cache(maxsize=None)
 def cv_executable(spec: ModelSpec):
     """Cached jitted fused LOO-CV for one model.
 
-    (X, y, W, fold_idx, aux) -> (mape, resid_mu, resid_sigma, preds); all
+    (X, y, W, fold_idx, valid, aux) -> (mape, resid_mu, resid_sigma); all
     folds are one vmapped weighted refit and the MAPE/residual reductions
     happen on-device, so selection needs a single scalar pull per model.
+    ``valid`` is a 0/1 mask over the fold axis: callers may pad the fold
+    list (and, via 0-weight rows in ``W``, the data rows) to bucketed
+    shapes so a store growing row by row keeps hitting one executable.
     """
 
-    def _cv(X, y, W, fold_idx, aux):
+    def _cv(X, y, W, fold_idx, valid, aux):
         def one_fold(w, i):
             params = spec.fit(X, y, w, aux)
             return spec.predict(params, X[i][None, :], aux)[0]
@@ -190,7 +214,12 @@ def cv_executable(spec: ModelSpec):
         y_f = y[fold_idx]
         ape = jnp.abs(pred - y_f) / jnp.maximum(jnp.abs(y_f), 1e-9)
         resid = pred - y_f
-        return ape.mean(), resid.mean(), resid.std(), pred
+        cnt = jnp.maximum(valid.sum(), 1.0)
+        mape = (ape * valid).sum() / cnt
+        mu = (resid * valid).sum() / cnt
+        sigma = jnp.sqrt(jnp.maximum(
+            (resid * resid * valid).sum() / cnt - mu * mu, 0.0))
+        return mape, mu, sigma
 
     return jax.jit(_cv)
 
@@ -336,7 +365,8 @@ def predict(spec: ModelSpec, params, X, aux) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 def cv_select(specs: Sequence[ModelSpec], X: np.ndarray, y: np.ndarray,
-              folds: np.ndarray, *, sharded: Optional[bool] = None
+              folds: np.ndarray, *, sharded: Optional[bool] = None,
+              row_weight: Optional[np.ndarray] = None
               ) -> Tuple[str, Dict[str, float], float, float]:
     """LOO-CV every model in one pipelined batch; returns
     (selected name, {name: mape}, resid mu, resid sigma of the selected).
@@ -345,6 +375,14 @@ def cv_select(specs: Sequence[ModelSpec], X: np.ndarray, y: np.ndarray,
     fold-weight matrix lives on device once, and each model's executable
     reduces MAPE/residual statistics on-device, so the only host traffic is
     a few scalars per model at the end.
+
+    ``row_weight`` (0/1 per row of ``X``) marks padding rows as inert:
+    every fold's weight vector is multiplied by it, so callers (the
+    replay plane's ``C3OPredictor(pad_rows=True)``) can zero-pad the data
+    to power-of-two row buckets and the fold list to power-of-two fold
+    buckets (masked via ``valid``) — selection against a store growing row
+    by row then reuses one compiled executable per bucket instead of
+    retracing per exact store size.  Folds must index real rows.
 
     With more than one device (or ``C3O_CV_SHARD=on``) the fold axis is
     partitioned over a "cv" mesh via shard_map — see
@@ -357,34 +395,45 @@ def cv_select(specs: Sequence[ModelSpec], X: np.ndarray, y: np.ndarray,
     Xj = jnp.asarray(X64, jnp.float32)
     yj = jnp.asarray(y, jnp.float32)
     folds = np.asarray(folds)
+    rw = (None if row_weight is None
+          else jnp.asarray(np.asarray(row_weight, np.float32)))
     n_dev = _cv_shard_devices() if sharded is None else \
         (len(jax.devices()) if sharded else 0)
+    F = len(folds)
+    # bucket the fold axis whenever rows are padded (the caller is asking
+    # for shape stability); the sharded path additionally pads to a
+    # device-count multiple
+    F_pad = _bucket(F, 8) if rw is not None else F
+    if n_dev:
+        F_pad += (-F_pad) % n_dev
+    folds_p = np.concatenate([folds, np.zeros(F_pad - F, folds.dtype)])
+    valid = jnp.asarray(np.concatenate([np.ones(F, np.float32),
+                                        np.zeros(F_pad - F, np.float32)]))
+    fold_j = jnp.asarray(folds_p)
+
+    def weights():
+        W = 1.0 - jax.nn.one_hot(fold_j, len(yj))          # [F_pad, n]
+        return W if rw is None else W * rw[None, :]
+
     pending = []
     if n_dev:
-        F = len(folds)
-        pad = (-F) % n_dev
-        folds_p = np.concatenate([folds, np.zeros(pad, folds.dtype)])
-        valid = jnp.asarray(np.concatenate([np.ones(F, np.float32),
-                                            np.zeros(pad, np.float32)]))
-        fold_j = jnp.asarray(folds_p)
         # off-CPU the executable donates its fold-weight buffer, so each
         # spec needs a fresh [F_pad, n] matrix; on CPU donation is disabled
         # and one shared W serves every spec
         donating = jax.default_backend() != "cpu"
-        W_shared = None if donating else 1.0 - jax.nn.one_hot(fold_j, len(y))
+        W_shared = None if donating else weights()
         for spec in specs:
             aux = spec.make_aux(X64)
-            W = (1.0 - jax.nn.one_hot(fold_j, len(y))) if donating \
-                else W_shared
+            W = weights() if donating else W_shared
             pending.append((spec.name, cv_executable_sharded(spec, n_dev)(
                 Xj, yj, W, fold_j, valid, aux)))
     else:
-        fold_j = jnp.asarray(folds)
-        W = 1.0 - jax.nn.one_hot(fold_j, len(y))           # [F, n] shared
+        W = weights()                                      # [F_pad, n] shared
         for spec in specs:
             aux = spec.make_aux(X64)
             pending.append((spec.name,
-                            cv_executable(spec)(Xj, yj, W, fold_j, aux)[:3]))
+                            cv_executable(spec)(Xj, yj, W, fold_j, valid,
+                                                aux)))
     mapes: Dict[str, float] = {}
     stats: Dict[str, Tuple[float, float]] = {}
     for name, (mape, mu, sigma) in pending:                 # single sync pass

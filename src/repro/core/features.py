@@ -21,9 +21,24 @@ from __future__ import annotations
 import io
 from dataclasses import dataclass
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
+
+# Instrumentation for the incremental view plane (read by tests and the
+# replay harness): full (re)builds should happen once per cold store, while
+# steady-state ingestion only ever extends cached state by the delta.
+VIEW_STATS: Dict[str, int] = {
+    "machine_view_builds": 0,     # machine_view assembled via full subset scan
+    "machine_view_extends": 0,    # cached view carried forward with the delta
+    "x_builds": 0,                # assembled-X buffer allocated from scratch
+    "x_extends": 0,               # assembled-X extended in place by new rows
+}
+
+
+def view_stats_reset() -> None:
+    for k in VIEW_STATS:
+        VIEW_STATS[k] = 0
 
 
 @dataclass(frozen=True)
@@ -55,7 +70,8 @@ class _Columns:
     buffer growth.
     """
 
-    __slots__ = ("codes", "scale_out", "context", "runtime", "used")
+    __slots__ = ("codes", "scale_out", "context", "runtime", "used",
+                 "xbuf", "xrows")
 
     def __init__(self, codes, scale_out, context, runtime):
         self.codes = np.ascontiguousarray(codes, np.int32)
@@ -63,6 +79,8 @@ class _Columns:
         self.context = np.ascontiguousarray(context, np.float64)
         self.runtime = np.ascontiguousarray(runtime, np.float64)
         self.used = len(self.codes)
+        self.xbuf = None          # [capacity, 1+k] assembled-X mirror (lazy)
+        self.xrows = 0            # valid assembled rows (<= used)
 
     @property
     def capacity(self) -> int:
@@ -83,6 +101,32 @@ class _Columns:
         new = np.empty((cap, old.shape[1]), old.dtype)
         new[:self.used] = old[:self.used]
         self.context = new
+        if self.xbuf is not None:
+            newx = np.empty((cap, self.xbuf.shape[1]), np.float64)
+            newx[:self.xrows] = self.xbuf[:self.xrows]
+            self.xbuf = newx
+
+    def x_view(self, n: int) -> np.ndarray:
+        """Assembled [n, 1+k] feature matrix over the first ``n`` rows.
+
+        The buffer mirrors (scale_out | context) at column-buffer capacity
+        and is extended IN PLACE as views grow past previously assembled
+        rows: after an append of ``m`` rows the next ``X`` access assembles
+        only those ``m`` — refit preparation is O(delta), not O(n).  Rows
+        are append-only, so slices handed out earlier stay valid."""
+        if self.xbuf is None:
+            self.xbuf = np.empty((self.capacity, self.context.shape[1] + 1),
+                                 np.float64)
+            self.xrows = 0
+            VIEW_STATS["x_builds"] += 1
+        if self.xrows < n:
+            lo = self.xrows
+            self.xbuf[lo:n, 0] = self.scale_out[lo:n]
+            self.xbuf[lo:n, 1:] = self.context[lo:n]
+            if lo:
+                VIEW_STATS["x_extends"] += 1
+            self.xrows = n
+        return self.xbuf[:n]
 
 
 class RuntimeData:
@@ -174,10 +218,12 @@ class RuntimeData:
 
     @property
     def X(self) -> np.ndarray:
-        """[n, d] float64 feature matrix, scale-out first (assembled once
-        and cached; views are append-safe, see ``_Columns``)."""
+        """[n, d] float64 feature matrix, scale-out first.  Backed by the
+        shared assembled-X buffer in ``_Columns``: built once per buffer,
+        then extended in place by exactly the delta rows as the data grows
+        (views are append-safe, see ``_Columns``)."""
         if self._X is None or len(self._X) != self._n:
-            self._X = assemble_X(self.scale_out, self.context)
+            self._X = self._cols.x_view(self._n)
         return self._X
 
     @property
@@ -230,9 +276,13 @@ class RuntimeData:
     def machine_view(self, machine: str) -> "RuntimeData":
         """Cached columnar batch for one machine type: repeated calls (the
         ``predictor_for`` hot path) return the SAME object, so its assembled
-        ``X`` is built at most once per (machine, data version)."""
+        ``X`` is built at most once per (machine, data version).  ``append``
+        carries cached views forward by appending only the delta rows, so
+        after an accepted contribution refit preparation never re-scans the
+        full store (see ``VIEW_STATS``)."""
         view = self._mview.get(machine)
         if view is None:
+            VIEW_STATS["machine_view_builds"] += 1
             view = self.subset(self.machine_indices(machine))
             self._mview[machine] = view
         return view
@@ -307,6 +357,22 @@ class RuntimeData:
             didx = np.nonzero(ocodes == code)[0] + n
             out._mindex[machine] = (np.concatenate([pidx, didx])
                                     if len(didx) else pidx)
+        # carry cached per-machine VIEWS forward too: extend each cached
+        # view with only its delta rows (columnar tail append), so refit
+        # preparation after an accepted contribution is O(delta) — the
+        # per-machine matrices are never rebuilt from a full-store scan
+        for machine, view in self._mview.items():
+            code = machines.index(machine) if machine in machines else -1
+            didx = np.nonzero(ocodes == code)[0]
+            if len(didx):
+                VIEW_STATS["machine_view_extends"] += 1
+                delta = RuntimeData.from_columns(
+                    other.schema, machines, ocodes[didx],
+                    other.scale_out[didx], other.context[didx],
+                    other.runtime[didx])
+                out._mview[machine] = view.append(delta)
+            else:
+                out._mview[machine] = view
         return out
 
     def concat(self, other: "RuntimeData") -> "RuntimeData":

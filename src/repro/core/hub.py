@@ -14,6 +14,8 @@ import pickle
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.configurator import Configurator
 from repro.core.datastore import RuntimeDataStore, ValidationReport
 from repro.core.features import JobSchema, RuntimeData
@@ -29,6 +31,11 @@ class JobRepo:
     store: RuntimeDataStore
     model_names: List[str] = field(default_factory=lambda: list(DEFAULT_MODELS))
     maintainer_machine_type: Optional[str] = None   # paper §IV-A
+    # extra C3OPredictor constructor kwargs (fixed per repo, so they need
+    # no cache-key slot): the evaluation replay plane sets
+    # {"pad_rows": True} here so per-checkpoint refits against the growing
+    # store reuse bucketed executables
+    predictor_kw: Dict = field(default_factory=dict)
     # fitted-predictor cache, keyed on everything the fit depends on:
     # (machine_type, seed, datastore version, model list).  ``contribute``
     # bumps the store version only when data is accepted, so hub traffic
@@ -56,7 +63,7 @@ class JobRepo:
             # engine as-is — no per-call re-filter or row copies
             d = self.store.data.machine_view(machine_type)
             pred = C3OPredictor(model_names=tuple(self.model_names),
-                                seed=seed).fit_data(d)
+                                seed=seed, **self.predictor_kw).fit_data(d)
             # stale versions can never be requested again: evict them
             self._fit_cache = {k: v for k, v in self._fit_cache.items()
                                if k[2] == self.store.version}
@@ -147,6 +154,35 @@ class JobRepo:
             self._fit_cache[key] = pred
             restored += 1
         return restored
+
+    def model_errors(self, machine_type: str, test: RuntimeData,
+                     track_models: Optional[Sequence[str]] = None,
+                     seed: int = 0) -> tuple:
+        """Held-out (MAPE, MAE) of every tracked model on ``test`` plus the
+        C3O predictor itself — one evaluation checkpoint of the replay
+        plane (paper §VI-C protocol: individual models refit on the shared
+        store; the ``"c3o"`` row additionally runs LOO-CV model selection
+        via ``predictor_for``/``cv_select`` first).
+
+        Returns ``({model: (mape, mae)}, selected_model_name)``.  Tracked
+        models dispatch through the engine's fused, shape-bucketed
+        ``val_executable``s; the C3O row predicts through the selected
+        model's cached batched executable.  ``track_models`` may include
+        baselines outside the repo's selection pool (e.g. ``"linreg"``)."""
+        from repro.core import engine
+        from repro.core.models.api import get_model
+        specs = [get_model(n) for n in
+                 (self.model_names if track_models is None else track_models)]
+        tr = self.store.data.machine_view(machine_type)
+        te = test.machine_view(machine_type)
+        errs = engine.holdout_errors(specs, tr.X, tr.y, te.X, te.y)
+        pred = self.predictor_for(machine_type, seed=seed)
+        yhat = np.nan_to_num(pred.predict(te.X), nan=1e12, posinf=1e12,
+                             neginf=-1e12)
+        ae = np.abs(yhat - te.y)
+        errs["c3o"] = (float(np.mean(ae / np.maximum(np.abs(te.y), 1e-9))),
+                       float(np.mean(ae)))
+        return errs, pred.selected
 
     def configurator(self, machine_type: str, prices: Dict[str, float],
                      scaleouts: Sequence[int], **kw) -> Configurator:

@@ -1,0 +1,20 @@
+"""Collaborative evaluation replay plane (paper §VI, Fig. 5/6 analogue).
+
+Reproduces the paper's headline empirical protocol: many users with
+heterogeneous execution contexts contribute runtime data to the shared
+collaborative store over time, and prediction error for a *held-out* user
+is measured as a function of store size — leave-one-user-out over the
+multi-user dataset emulated by ``repro.workloads.spark_emul``.
+
+``repro.eval.dataset``   multi-user dataset assembly + contribution chunking
+``repro.eval.replay``    the deterministic replay harness and its CLI
+                         (``python -m repro.eval.replay``)
+"""
+from repro.eval.dataset import (MultiUserData, build_multi_user,
+                                contribution_chunks)
+
+__all__ = ["MultiUserData", "build_multi_user", "contribution_chunks"]
+
+# NOTE: repro.eval.replay is intentionally NOT imported here — it is the
+# ``python -m repro.eval.replay`` entry point, and importing it from the
+# package __init__ would double-execute the module under runpy.

@@ -1,0 +1,284 @@
+"""Deterministic collaborative-replay harness (paper §VI, Fig. 5/6).
+
+Leave-one-user-out over a multi-user emulated dataset: for each held-out
+user, the remaining users' measurements are ingested into a fresh
+``RuntimeDataStore`` through ``contribute`` (validated, fingerprint-chained)
+in a seeded shuffled contribution order, and after every contribution the
+held-out user's configurations are scored — per machine type, per model —
+producing MAPE/MAE *trajectories versus store size*: the paper's
+error-vs-training-data curves, with all model selection flowing through
+``engine.cv_select`` (via ``JobRepo.predictor_for``) and all per-model
+scoring through the engine's fused, shape-bucketed ``val_executable``s.
+
+Determinism: every RNG is seeded from SHA-256 of a structured identity key
+(job, user, seed); trajectory rows are emitted in a canonical order and the
+harness reports a SHA-256 fingerprint of the trajectory TSV — two runs of
+``python -m repro.eval.replay --users 8 --seed 0`` produce byte-identical
+trajectories.
+
+CLI:
+    PYTHONPATH=src python -m repro.eval.replay --users 8 --seed 0
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.datastore import RuntimeDataStore
+from repro.core.hub import JobRepo
+from repro.core.predictor import DEFAULT_MODELS
+from repro.eval.dataset import (MultiUserData, build_multi_user,
+                                contribution_chunks, derived_rng)
+from repro.workloads.spark_emul import SCHEMAS
+
+TRAJECTORY_COLUMNS = ("job", "held_out", "step", "store_rows", "machine",
+                      "model", "mape", "mae", "selected")
+
+#: the C3O row must strictly beat these at full store size (ISSUE/paper
+#: Table II: the optimistic BOM and a plain linear regressor are the
+#: reference baselines the specialized selection is measured against)
+BASELINE_MODELS = ("bom", "linreg")
+
+
+@dataclass(frozen=True)
+class ReplayConfig:
+    jobs: Tuple[str, ...] = tuple(SCHEMAS)
+    n_users: int = 8
+    seed: int = 0
+    chunks_per_user: int = 1          # contributions each user splits into
+    model_names: Tuple[str, ...] = DEFAULT_MODELS      # c3o selection pool
+    track_models: Tuple[str, ...] = DEFAULT_MODELS + ("linreg",)
+    max_cv_folds: int = 20
+    max_validation_rows: int = 1024
+
+
+@dataclass
+class ReplayResult:
+    config: ReplayConfig
+    records: List[dict]
+    tsv: str
+    fingerprint: str
+    summary: Dict[str, dict]
+    wall_s: float
+    contributions: int = 0
+    accepted: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return all(s["ok"] for s in self.summary.values())
+
+
+# ---------------------------------------------------------------------------
+# replay core
+# ---------------------------------------------------------------------------
+
+def _checkpoint(job: str, held: int, step: int, repo: JobRepo,
+                test, cfg: ReplayConfig) -> List[dict]:
+    """Score the held-out user's rows against the current store state."""
+    out = []
+    store_rows = len(repo.store)
+    for machine in test.present_machines():
+        tr = repo.store.data.machine_view(machine)
+        te = test.machine_view(machine)
+        if len(tr) < 5 or len(te) < 2:
+            continue            # too little shared data for this machine yet
+        errs, selected = repo.model_errors(machine, test,
+                                           track_models=cfg.track_models,
+                                           seed=cfg.seed)
+        for model, (mape, mae) in errs.items():
+            out.append({"job": job, "held_out": held, "step": step,
+                        "store_rows": store_rows, "machine": machine,
+                        "model": model, "mape": mape, "mae": mae,
+                        "selected": selected if model == "c3o" else ""})
+    return out
+
+
+def replay_job(job: str, mu: MultiUserData, cfg: ReplayConfig
+               ) -> Tuple[List[dict], int, int]:
+    """Leave-one-user-out replay of one job.
+
+    Returns (trajectory records, contributions attempted, accepted)."""
+    if len(mu.users) < 2:
+        raise ValueError(
+            f"leave-one-user-out needs at least 2 users, got {len(mu.users)}"
+            " (with 1 user there is nobody left to contribute)")
+    records: List[dict] = []
+    contributions = accepted = 0
+    for held in mu.users:
+        test = mu.per_user[held]
+        chunks = []
+        for u in mu.users:
+            if u == held:
+                continue
+            chunks.extend(contribution_chunks(
+                mu.per_user[u], cfg.chunks_per_user,
+                derived_rng("chunks", job, u, cfg.seed)))
+        order = derived_rng("order", job, held, cfg.seed) \
+            .permutation(len(chunks))
+        store = RuntimeDataStore(chunks[order[0]], seed=cfg.seed,
+                                 model_names=list(cfg.model_names),
+                                 max_validation_rows=cfg.max_validation_rows)
+        repo = JobRepo(job, job, test.schema, store,
+                       model_names=list(cfg.model_names),
+                       predictor_kw={"pad_rows": True,
+                                     "max_cv_folds": cfg.max_cv_folds})
+        records += _checkpoint(job, held, 0, repo, test, cfg)
+        for step, ci in enumerate(order[1:], start=1):
+            report = store.contribute(chunks[ci])
+            contributions += 1
+            accepted += bool(report.accepted)
+            records += _checkpoint(job, held, step, repo, test, cfg)
+    return records, contributions, accepted
+
+
+# ---------------------------------------------------------------------------
+# trajectory TSV + summary
+# ---------------------------------------------------------------------------
+
+def trajectory_tsv(records: Sequence[dict]) -> str:
+    """Canonical TSV of the trajectory records (the determinism artifact:
+    byte-identical across runs of the same config on the same platform)."""
+    lines = ["\t".join(TRAJECTORY_COLUMNS)]
+    for r in records:
+        lines.append("\t".join((
+            r["job"], str(r["held_out"]), str(r["step"]),
+            str(r["store_rows"]), r["machine"], r["model"],
+            "%.6g" % r["mape"], "%.6g" % r["mae"], r["selected"])))
+    return "\n".join(lines) + "\n"
+
+
+def _quartile_medians(sizes: np.ndarray, errs: np.ndarray) -> List[float]:
+    """Median error per store-size quartile (Fig. 5's x-axis compressed to
+    four buckets; medians across users/machines tame measurement noise).
+
+    Quartiles are equal-count over the size-sorted records (stable sort, so
+    ties split deterministically) — every bucket is non-empty even when the
+    replay only visited a few distinct store sizes."""
+    order = np.argsort(sizes, kind="stable")
+    return [float(np.median(errs[part]))
+            for part in np.array_split(order, 4) if len(part)]
+
+
+def summarize(records: Sequence[dict], cfg: ReplayConfig) -> Dict[str, dict]:
+    """Per-job rollup of the acceptance criteria: final-store MAPE per
+    model, C3O vs baselines, and quartile-median error monotonicity."""
+    summary: Dict[str, dict] = {}
+    for job in cfg.jobs:
+        rows = [r for r in records if r["job"] == job]
+        if not rows:
+            continue
+        # final-store errors: the last checkpoint of each held-out user
+        last_step: Dict[int, int] = {}
+        for r in rows:
+            last_step[r["held_out"]] = max(r["step"],
+                                           last_step.get(r["held_out"], 0))
+        final: Dict[str, List[float]] = {}
+        for r in rows:
+            if r["step"] == last_step[r["held_out"]]:
+                final.setdefault(r["model"], []).append(r["mape"])
+        final_mape = {m: float(np.mean(v)) for m, v in final.items()}
+        c3o = [r for r in rows if r["model"] == "c3o"]
+        sizes = np.asarray([r["store_rows"] for r in c3o], np.float64)
+        errs = np.asarray([r["mape"] for r in c3o], np.float64)
+        quart = _quartile_medians(sizes, errs)
+        # non-increasing across store-size quartiles, with a small noise
+        # band between ADJACENT quartiles (5% relative + 0.005 absolute —
+        # the emulator's measurement-noise floor: a job that converges in
+        # the first quartile sits at its error floor, where medians wiggle
+        # at that level) — but the full-store quartile must be STRICTLY
+        # below the small-store one: a flat trajectory means collaboration
+        # taught the predictor nothing, which is a failure, not a pass
+        monotone = (all(quart[i + 1] <= quart[i] * 1.05 + 5e-3
+                        for i in range(len(quart) - 1))
+                    and quart[-1] < quart[0])
+        baselines = {b: final_mape[b] for b in BASELINE_MODELS
+                     if b in final_mape}
+        beats = all(final_mape["c3o"] < v for v in baselines.values())
+        selected = {}
+        for r in c3o:
+            if r["step"] == last_step[r["held_out"]] and r["selected"]:
+                selected[r["selected"]] = selected.get(r["selected"], 0) + 1
+        summary[job] = {
+            "final_mape": final_mape,
+            "c3o_final": final_mape["c3o"],
+            "baselines": baselines,
+            "beats_baselines": beats,
+            "quartile_medians": quart,
+            "monotone": monotone,
+            "selected_counts": selected,
+            "ok": final_mape["c3o"] < 0.10 and beats and monotone,
+        }
+    return summary
+
+
+def run_replay(cfg: ReplayConfig) -> ReplayResult:
+    t0 = time.time()
+    records: List[dict] = []
+    contributions = accepted = 0
+    for job in cfg.jobs:
+        mu = build_multi_user(job, cfg.n_users, cfg.seed)
+        recs, contribs, acc = replay_job(job, mu, cfg)
+        records += recs
+        contributions += contribs
+        accepted += acc
+    tsv = trajectory_tsv(records)
+    return ReplayResult(
+        config=cfg, records=records, tsv=tsv,
+        fingerprint=hashlib.sha256(tsv.encode()).hexdigest(),
+        summary=summarize(records, cfg), wall_s=time.time() - t0,
+        contributions=contributions, accepted=accepted)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.eval.replay",
+        description="Leave-one-user-out collaborative replay (paper §VI)")
+    ap.add_argument("--users", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--jobs", default=",".join(SCHEMAS),
+                    help="comma-separated job subset")
+    ap.add_argument("--chunks", type=int, default=1,
+                    help="contributions each user splits their data into")
+    ap.add_argument("--out", default=None,
+                    help="trajectory TSV path (default: "
+                         "eval_out/replay_users<N>_seed<S>.tsv)")
+    args = ap.parse_args(argv)
+    cfg = ReplayConfig(jobs=tuple(args.jobs.split(",")), n_users=args.users,
+                       seed=args.seed, chunks_per_user=args.chunks)
+    res = run_replay(cfg)
+
+    out = args.out or os.path.join(
+        "eval_out", f"replay_users{cfg.n_users}_seed{cfg.seed}.tsv")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        f.write(res.tsv)
+
+    for job, s in res.summary.items():
+        base = " ".join(f"{m}={v:.4f}" for m, v in sorted(s["baselines"].items()))
+        quart = ">".join(f"{q:.4f}" for q in s["quartile_medians"])
+        sel = ",".join(f"{k}:{v}" for k, v in sorted(s["selected_counts"].items()))
+        print(f"replay.{job} c3o_final={s['c3o_final']:.4f} {base} "
+              f"beats_baselines={s['beats_baselines']} "
+              f"quartile_medians={quart} monotone={s['monotone']} "
+              f"selected={sel} ok={s['ok']}")
+    print(f"replay.contributions {res.accepted}/{res.contributions} accepted")
+    print(f"replay.trajectory {out} rows={len(res.records)}")
+    print(f"replay.fingerprint {res.fingerprint}")
+    print(f"replay.wall_s {res.wall_s:.1f}")
+    print(f"replay.ok {res.ok}")
+    return 0 if res.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

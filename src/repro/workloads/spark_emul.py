@@ -123,15 +123,24 @@ def true_runtime(job: str, machine: str, s: float, features: Tuple) -> float:
     return TIME_FNS[job](MACHINES[machine], s, *features)
 
 
+def derived_rng(*key) -> np.random.Generator:
+    """Deterministic generator seeded from SHA-256 of a structured identity
+    key (independent of PYTHONHASHSEED).  The SINGLE definition of the
+    hash-to-seed mapping: measurement noise streams, user designs, and the
+    eval replay plane all derive their RNGs here, so the byte layout of the
+    seed can never drift between modules (which would silently change every
+    fingerprint the harness reports)."""
+    digest = hashlib.sha256("|".join(map(str, key)).encode()).digest()[:8]
+    return np.random.default_rng(int.from_bytes(digest, "little"))
+
+
 # ---------------------------------------------------------------------------
 # noisy measurement: 5 repetitions, median (paper §VI-B)
 # ---------------------------------------------------------------------------
 
 def _measure(job: str, machine: str, s: float, features: Tuple,
              seed: int, noise: float = 0.02, reps: int = 5) -> float:
-    key = f"{job}|{machine}|{s}|{features}|{seed}".encode()
-    rng = np.random.default_rng(
-        int.from_bytes(hashlib.sha256(key).digest()[:8], "little"))
+    rng = derived_rng(job, machine, s, features, seed)
     base = true_runtime(job, machine, s, features)
     runs = base * rng.lognormal(0.0, noise, size=reps)
     straggler = rng.random(reps) < 0.04
@@ -153,34 +162,34 @@ def _pick(grid: List[Tuple], k: int, seed: int) -> List[Tuple]:
     return [grid[i] for i in sorted(idx)]
 
 
-def job_design(job: str, seed: int = 7) -> List[Tuple[str, float, Tuple]]:
-    """Unique (machine, scale_out, (size, ctx...)) configurations."""
-    machines = list(MACHINES)
+def _job_cells(job: str) -> Tuple[List[Tuple], List[int]]:
+    """Canonical ((size, ctx...) cells, scale-out grid) for one job."""
     if job == "sort":
         sizes = [10, 12, 14, 16, 18, 20]
-        cells = [(z,) for z in sizes]
-        scale = _SCALEOUTS7
-    elif job == "grep":
-        cells = [(z, kw) for z in [10, 15, 20]
-                 for kw in [0.002, 0.02, 0.08]]
-        scale = _SCALEOUTS6
-    elif job == "sgd":
+        return [(z,) for z in sizes], _SCALEOUTS7
+    if job == "grep":
+        return [(z, kw) for z in [10, 15, 20]
+                for kw in [0.002, 0.02, 0.08]], _SCALEOUTS6
+    if job == "sgd":
         # 5 contexts x 2 sizes: every context group spans sizes AND
         # scale-outs (the optimistic SSM needs same-context groups)
         ctxs = [(10, 50), (25, 100), (40, 50), (70, 100), (100, 50)]
-        cells = [(z, it, f) for (it, f) in ctxs for z in [10, 30]]
-        scale = _SCALEOUTS6
-    elif job == "kmeans":
+        return [(z, it, f) for (it, f) in ctxs for z in [10, 30]], _SCALEOUTS6
+    if job == "kmeans":
         ctxs = [(3, 10), (5, 30), (6, 10), (8, 30), (9, 10)]
-        cells = [(z, k, d) for (k, d) in ctxs for z in [10, 20]]
-        scale = _SCALEOUTS6
-    elif job == "pagerank":
+        return [(z, k, d) for (k, d) in ctxs for z in [10, 20]], _SCALEOUTS6
+    if job == "pagerank":
         ctxs = [(0.01, 2e5), (0.001, 1e6), (0.001, 5e6), (0.0001, 5e6),
                 (0.0001, 2e7), (0.01, 1e6), (0.001, 2e7), (0.0001, 1e6)]
-        cells = [(z, c, u) for (c, u) in ctxs for z in [0.13, 0.44]]
-        scale = _SCALEOUTS6
-    else:
-        raise ValueError(job)
+        return [(z, c, u) for (c, u) in ctxs
+                for z in [0.13, 0.44]], _SCALEOUTS6
+    raise ValueError(job)
+
+
+def job_design(job: str, seed: int = 7) -> List[Tuple[str, float, Tuple]]:
+    """Unique (machine, scale_out, (size, ctx...)) configurations."""
+    machines = list(MACHINES)
+    cells, scale = _job_cells(job)
     design = [(m, float(s), tuple(map(float, cell)))
               for m in machines for s in scale for cell in cells]
     if job == "pagerank":        # 3*6*16=288 -> drop 6 cells (Table I: 282)
@@ -190,15 +199,72 @@ def job_design(job: str, seed: int = 7) -> List[Tuple[str, float, Tuple]]:
     return design
 
 
-def generate_job_data(job: str, seed: int = 0) -> RuntimeData:
-    """Emulated dataset, assembled straight into the columnar layout.
+# Which cell components a user's execution context may perturb smoothly:
+# the PHYSICALLY continuous ones — dataset size (component 0 everywhere),
+# grep's keyword-hit ratio, pagerank's page count.  Integer job parameters
+# (k, iterations, n_features, dim) stay on the canonical grid: a user runs
+# k-means with k=3, not k=3.07.  Jittering them would also make every
+# user's context block a unique fingerprint perfectly confounded with that
+# user's data size — greedy tree splits then separate users on meaningless
+# epsilon differences in k and inherit the wrong user's size regime, an
+# artifact of the emulation rather than the paper's setting.  pagerank's
+# convergence threshold also stays fixed: the iteration count is a ceil()
+# of it, so an epsilon perturbation across the 10^-k boundary jumps the
+# true runtime discontinuously.
+_JITTERABLE: Dict[str, Tuple[int, ...]] = {
+    "sort": (0,), "grep": (0, 1), "sgd": (0,), "kmeans": (0,),
+    "pagerank": (0, 2),
+}
+
+
+def _user_rng(job: str, user: int, seed: int) -> np.random.Generator:
+    return derived_rng("user", job, user, seed)
+
+
+def user_design(job: str, user: int, seed: int = 0, n_cells: int = 4,
+                n_scale: int = 5,
+                jitter: float = 0.10) -> List[Tuple[str, float, Tuple]]:
+    """One collaborating user's execution context (paper §VI-C "global").
+
+    Users share the job but not the exact context: each draws its own
+    subset of context cells and scale-outs from the canonical grids, then
+    perturbs the continuous cell components (dataset size, keyword ratio,
+    iterations, ...) multiplicatively by up to ``jitter``.  Perturbation is
+    applied once per cell — within a user every context group still spans
+    all of its scale-outs (the optimistic SSM needs same-context groups) —
+    while across users contexts never coincide, which is exactly the
+    heterogeneity the leave-one-user-out replay measures generalization
+    over.  The row count is a user-independent constant
+    (machines x n_scale x n_cells) so replayed store sizes are identical
+    across held-out users and the engine's shape-bucketed executables are
+    shared."""
+    rng = _user_rng(job, user, seed)
+    cells, scale = _job_cells(job)
+    pick_c = sorted(rng.choice(len(cells), size=min(n_cells, len(cells)),
+                               replace=False).tolist())
+    pick_s = sorted(rng.choice(len(scale), size=min(n_scale, len(scale)),
+                               replace=False).tolist())
+    jitterable = _JITTERABLE[job]
+    ucells = []
+    for ci in pick_c:
+        cell = [float(v) for v in cells[ci]]
+        for j in jitterable:
+            cell[j] *= float(rng.uniform(1.0 - jitter, 1.0 + jitter))
+        ucells.append(tuple(cell))
+    return [(m, float(scale[si]), cell)
+            for m in MACHINES for si in pick_s for cell in ucells]
+
+
+def _measure_design(job: str, design: List[Tuple[str, float, Tuple]],
+                    seed: int) -> RuntimeData:
+    """Emulated dataset for one design, assembled straight into the
+    columnar layout.
 
     The measurement loop is inherently per-configuration (each cell's noise
     stream is seeded from its identity hash), but the columns are written
     into preallocated arrays and adopted zero-copy by ``from_columns`` —
     no intermediate Python row lists."""
     schema = SCHEMAS[job]
-    design = job_design(job)
     machines = tuple(MACHINES)
     code_of = {m: i for i, m in enumerate(machines)}
     n = len(design)
@@ -213,6 +279,19 @@ def generate_job_data(job: str, seed: int = 0) -> RuntimeData:
         runtime[i] = _measure(job, machine, s, cell, seed)
     return RuntimeData.from_columns(schema, machines, codes, scale_out,
                                     context, runtime)
+
+
+def generate_job_data(job: str, seed: int = 0) -> RuntimeData:
+    """The paper's Table I dataset layout (one pooled global dataset)."""
+    return _measure_design(job, job_design(job), seed)
+
+
+def generate_user_data(job: str, user: int, seed: int = 0,
+                       **design_kw) -> RuntimeData:
+    """One user's contribution-ready runtime data: their perturbed design
+    (``user_design``) measured with a user-specific noise stream."""
+    design = user_design(job, user, seed, **design_kw)
+    return _measure_design(job, design, seed * 10007 + user + 1)
 
 
 def generate_all(seed: int = 0) -> Dict[str, RuntimeData]:

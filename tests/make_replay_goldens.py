@@ -1,0 +1,34 @@
+"""Regenerate the golden mini-replay MAPEs that pin tier-1 against silent
+model/engine drift.  Run DELIBERATELY — a diff in the goldens is a claim
+that prediction quality changed on purpose:
+
+    PYTHONPATH=src python tests/make_replay_goldens.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from test_eval_replay import GOLDEN_PATH, MINI_CFG  # noqa: E402
+
+from repro.eval import replay as R  # noqa: E402
+
+
+def main() -> None:
+    res = R.run_replay(MINI_CFG)
+    golden = {job: {m: round(v, 6) for m, v in s["final_mape"].items()}
+              for job, s in res.summary.items()}
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH} (fingerprint {res.fingerprint})")
+    for job, models in golden.items():
+        print(f"  {job}: " + " ".join(f"{m}={v:.4f}"
+                                      for m, v in sorted(models.items())))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """Columnar runtime-data plane: struct-of-arrays semantics, TSV round-trip
-fidelity, incremental ingestion (chained fingerprint, amortized append),
+fidelity, incremental ingestion (chained fingerprint, amortized append,
+O(delta) machine-view extension), stratified validation subsampling,
 corrupt fit-cache sidecars, and device-sharded CV parity."""
 import hashlib
 import os
@@ -9,7 +10,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import engine
+from repro.core import engine, features
 from repro.core.datastore import RuntimeDataStore
 from repro.core.features import JobSchema, RuntimeData
 from repro.core.hub import JobRepo
@@ -165,6 +166,109 @@ def test_empty_contribution_rejected_without_version_bump(grep_data):
     assert "empty contribution" in rep.reason
     assert store.version == v0 and store.fingerprint == fp0
     assert len(store) == n0
+
+
+def test_machine_view_refit_prep_is_o_delta(grep_data):
+    """Regression for the PR 3 follow-on: after an accepted contribution,
+    preparing a refit (machine_view + assembled X) must never rebuild
+    per-machine state from a full-store scan — cached views are carried
+    forward by appending only the delta rows, and the assembled-X buffer
+    is extended in place."""
+    rng = np.random.default_rng(7)
+    idx = rng.permutation(len(grep_data))
+    store = RuntimeDataStore(grep_data.subset(idx[:150]), seed=0)
+    machines = store.data.present_machines()
+    before = {m: store.data.machine_view(m).X.copy() for m in machines}
+    assert store.contribute(grep_data.subset(idx[150:180])).accepted
+
+    features.view_stats_reset()
+    views = {m: store.data.machine_view(m) for m in machines}
+    xs = {m: v.X for m, v in views.items()}
+    assert features.VIEW_STATS["machine_view_builds"] == 0, \
+        "machine_view rebuilt from a full-store subset scan"
+    assert features.VIEW_STATS["x_builds"] == 0, \
+        "assembled X rebuilt from scratch instead of extended in place"
+    assert features.VIEW_STATS["x_extends"] >= 1
+
+    # and the incrementally extended state is CORRECT: prefix preserved,
+    # delta rows appended, identical to a cold rebuild
+    for m in machines:
+        np.testing.assert_array_equal(xs[m][: len(before[m])], before[m])
+        cold = store.data.subset(
+            np.nonzero(store.data.machine_type == m)[0])
+        np.testing.assert_array_equal(xs[m], cold.X)
+        np.testing.assert_array_equal(views[m].y, cold.y)
+
+
+# --------------------------------------------------------------------------
+# stratified validation subsampling
+# --------------------------------------------------------------------------
+
+def _imbalanced_store(grep_data, n_major=800, n_minor=8, cap=32):
+    """~100:1 machine-type imbalance under a small validation cap."""
+    rng = np.random.default_rng(5)
+    major = grep_data.filter_machine("m5.xlarge")
+    minor = grep_data.filter_machine("c5.xlarge")
+    maj_idx = rng.choice(len(major), n_major, replace=True)
+    base = major.subset(maj_idx).append(minor.subset(np.arange(n_minor)))
+    return RuntimeDataStore(base, seed=0, max_validation_rows=cap), minor
+
+
+def test_stratified_validation_keeps_rare_machine_signal(grep_data):
+    """A 100:1 imbalanced store under a small ``max_validation_rows`` cap
+    must still JUDGE contributions for the rare machine type: uniform
+    subsampling starved its holdout below 2 rows, waving poisoned rows
+    through as 'insufficient data'.  The poison fabricates runtimes for
+    configurations the store already holds (§III-C's threat model: wrong
+    numbers for known configs poison every collaborator's fit)."""
+    store, minor = _imbalanced_store(grep_data)
+    poisoned = minor.subset(np.tile(np.arange(8), 3))
+    poisoned = RuntimeData(poisoned.schema, poisoned.machine_type,
+                           poisoned.X, poisoned.y * 40.0)
+    rep = store.contribute(poisoned)
+    assert not rep.accepted, \
+        "poisoned rare-machine contribution slipped past validation"
+    assert "c5.xlarge" in rep.reason
+
+    honest = minor.subset(np.arange(8, 28))
+    rep = store.contribute(honest)
+    assert rep.accepted, rep.reason
+
+
+def test_stratified_split_caps_and_floors(grep_data):
+    store, _ = _imbalanced_store(grep_data)
+    hold, train = store._stratified_split(np.random.default_rng(0))
+    assert len(hold) <= store.max_validation_rows
+    assert len(train) <= store.max_validation_rows
+    mt = store.data.machine_type
+    # the rare machine keeps its full 20/80 split on BOTH sides
+    assert (mt[hold] == "c5.xlarge").sum() == 2
+    assert (mt[train] == "c5.xlarge").sum() == 6
+    # no row on both sides
+    assert not set(hold.tolist()) & set(train.tolist())
+
+
+# --------------------------------------------------------------------------
+# bucket-padded fit/CV parity (the replay plane's shape-stable path)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow          # compiles a second (padded-shape) CV pipeline
+def test_pad_rows_predictor_matches_exact_shapes(grep_data):
+    """C3OPredictor(pad_rows=True) — zero-weight row padding + masked fold
+    buckets — selects the same model and predicts within float tolerance
+    of the exact-shape reference."""
+    from repro.core.predictor import C3OPredictor
+    d = grep_data.machine_view("m5.xlarge")
+    ref = C3OPredictor(max_cv_folds=15).fit_data(d)
+    pad = C3OPredictor(max_cv_folds=15, pad_rows=True).fit_data(d)
+    assert pad.selected == ref.selected
+    for name in ref.cv_mape:
+        np.testing.assert_allclose(pad.cv_mape[name], ref.cv_mape[name],
+                                   rtol=0.05, atol=1e-4)
+    np.testing.assert_allclose(pad.predict(d.X[:16]), ref.predict(d.X[:16]),
+                               rtol=0.05)
+    np.testing.assert_allclose(pad.mu, ref.mu, rtol=0.05, atol=1e-2)
+    np.testing.assert_allclose(pad.sigma, ref.sigma, rtol=0.05, atol=1e-2)
 
 
 # --------------------------------------------------------------------------

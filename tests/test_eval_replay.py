@@ -1,0 +1,156 @@
+"""Collaborative evaluation replay plane: dataset assembly invariants,
+trajectory structure, golden-pinned mini-replay MAPEs (drift tripwire),
+and cross-run determinism."""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.eval import replay as R
+from repro.eval.dataset import build_multi_user, contribution_chunks, derived_rng
+from repro.workloads import spark_emul as W
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "replay_mini.json")
+
+MINI_CFG = R.ReplayConfig(jobs=("grep", "kmeans"), n_users=2, seed=0,
+                          chunks_per_user=3)
+
+
+@pytest.fixture(scope="module")
+def mini_result():
+    return R.run_replay(MINI_CFG)
+
+
+# --------------------------------------------------------------------------
+# dataset assembly
+# --------------------------------------------------------------------------
+
+def test_user_datasets_are_constant_size_and_context_coherent():
+    mu = build_multi_user("grep", 4, seed=0)
+    sizes = {len(d) for d in mu.per_user.values()}
+    assert len(sizes) == 1          # store sizes align across held-out users
+    for u, d in mu.per_user.items():
+        # user-level perturbation: every context group spans all of the
+        # user's scale-outs (the optimistic SSM needs same-context groups)
+        groups = W.context_groups(d)
+        n_scale = len(np.unique(d.scale_out))
+        assert all(len(np.unique(d.scale_out[g])) == n_scale for g in groups)
+        assert set(d.present_machines()) == set(W.MACHINES)
+    # contexts differ across users (the heterogeneity being replayed)
+    c0 = mu.per_user[0].context
+    c1 = mu.per_user[1].context
+    assert not np.isin(np.round(c1[:, -1], 9), np.round(c0[:, -1], 9)).any()
+
+
+def test_contribution_chunks_partition_rows():
+    d = W.generate_user_data("grep", 0, 0)
+    chunks = contribution_chunks(d, 3, derived_rng("chunks", "grep", 0, 0))
+    assert sum(len(c) for c in chunks) == len(d)
+    merged = chunks[0]
+    for c in chunks[1:]:
+        merged = merged.append(c)
+    # a permutation partition: same multiset of rows
+    assert sorted(merged.y.tolist()) == sorted(d.y.tolist())
+    # deterministic in the rng key
+    again = contribution_chunks(d, 3, derived_rng("chunks", "grep", 0, 0))
+    for a, b in zip(chunks, again):
+        np.testing.assert_array_equal(a.y, b.y)
+
+
+# --------------------------------------------------------------------------
+# trajectory structure + goldens
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_trajectory_structure(mini_result):
+    res = mini_result
+    assert res.records, "replay produced no checkpoints"
+    jobs = {r["job"] for r in res.records}
+    assert jobs == set(MINI_CFG.jobs)
+    models = {r["model"] for r in res.records}
+    assert models == set(MINI_CFG.track_models) | {"c3o"}
+    for r in res.records:
+        assert r["mape"] >= 0 and r["mae"] >= 0
+        if r["model"] == "c3o":
+            assert r["selected"] in MINI_CFG.model_names
+        else:
+            assert r["selected"] == ""
+    # store sizes grow along each (job, held_out) trajectory
+    for job in MINI_CFG.jobs:
+        for held in range(MINI_CFG.n_users):
+            sizes = [r["store_rows"] for r in res.records
+                     if r["job"] == job and r["held_out"] == held
+                     and r["model"] == "c3o"]
+            assert sizes == sorted(sizes)
+    # the TSV is the canonical artifact: header + one line per record,
+    # fingerprint = sha256 over it
+    lines = res.tsv.strip().split("\n")
+    assert lines[0].split("\t") == list(R.TRAJECTORY_COLUMNS)
+    assert len(lines) == len(res.records) + 1
+    assert res.fingerprint == hashlib.sha256(res.tsv.encode()).hexdigest()
+
+
+@pytest.mark.slow
+def test_golden_mini_replay_mapes(mini_result):
+    """Fixed-seed mini replay pinned to stored goldens: silent drift in any
+    model, the engine's CV/fit paths, the emulators, or the replay protocol
+    fails tier-1.  Regenerate (deliberately!) with
+    ``python -m tests.make_replay_goldens``."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    summary = mini_result.summary
+    assert set(golden) == set(MINI_CFG.jobs)
+    for job, expected in golden.items():
+        got = summary[job]["final_mape"]
+        assert set(got) == set(expected), (job, got, expected)
+        for model, mape in expected.items():
+            np.testing.assert_allclose(
+                got[model], mape, rtol=0.05, atol=3e-3,
+                err_msg=f"{job}/{model} drifted from golden")
+
+
+@pytest.mark.slow
+def test_replay_deterministic_across_runs():
+    cfg = R.ReplayConfig(jobs=("sort",), n_users=2, seed=0,
+                         chunks_per_user=2)
+    a = R.run_replay(cfg)
+    b = R.run_replay(cfg)
+    assert a.tsv == b.tsv
+    assert a.fingerprint == b.fingerprint
+
+
+# --------------------------------------------------------------------------
+# summary logic (no engine involved)
+# --------------------------------------------------------------------------
+
+def _rec(job, held, step, rows, model, mape, selected=""):
+    return {"job": job, "held_out": held, "step": step, "store_rows": rows,
+            "machine": "m", "model": model, "mape": mape, "mae": mape,
+            "selected": selected}
+
+
+def test_summarize_final_and_quartiles():
+    cfg = R.ReplayConfig(jobs=("grep",), n_users=2,
+                         track_models=("bom", "linreg"))
+    records = []
+    for held, err in ((0, 0.40), (1, 0.60)):
+        for step, rows in enumerate((10, 20, 30, 40)):
+            decayed = err / (step + 1)
+            records.append(_rec("grep", held, step, rows, "c3o", decayed,
+                                selected="gbm"))
+            records.append(_rec("grep", held, step, rows, "bom",
+                                2 * decayed))
+            records.append(_rec("grep", held, step, rows, "linreg", 0.5))
+    s = R.summarize(records, cfg)["grep"]
+    np.testing.assert_allclose(s["c3o_final"], np.mean([0.1, 0.15]))
+    assert s["beats_baselines"]
+    assert s["monotone"]                    # strictly decaying trajectories
+    assert s["selected_counts"] == {"gbm": 2}
+    assert len(s["quartile_medians"]) == 4
+    # an error trajectory that RISES at the end must flip monotone off
+    records.append(_rec("grep", 0, 4, 50, "c3o", 5.0, selected="gbm"))
+    records.append(_rec("grep", 1, 4, 50, "c3o", 5.0, selected="gbm"))
+    assert not R.summarize(records, cfg)["grep"]["monotone"]

@@ -1,0 +1,100 @@
+"""Property-based hardening of the runtime-data plane: TSV codec round
+trips, fingerprint chaining, and stratified-subsampling allocation hold for
+*arbitrary* machine names, float magnitudes, row counts, and delta splits —
+not just the emulated Spark datasets the rest of the suite uses."""
+import hashlib
+import string
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # deterministic example sweeps
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.core.datastore import RuntimeDataStore, _waterfill
+from repro.core.features import JobSchema, RuntimeData
+
+# np.loadtxt splits on the delimiter only; anything printable and
+# tab/newline-free is legal in a machine name — '#' included (comments are
+# disabled in the codec), plus '.', '-', and digits.
+_NAME_CHARS = string.ascii_letters + string.digits + "#.-_:"
+
+
+def _random_data(rng: np.random.Generator, n: int, k: int,
+                 scale: float) -> RuntimeData:
+    schema = JobSchema("prop", tuple(f"c{i}" for i in range(k)))
+    n_machines = int(rng.integers(1, 4))
+    names = []
+    for _ in range(n_machines):
+        length = int(rng.integers(1, 12))
+        names.append("".join(rng.choice(list(_NAME_CHARS), size=length)))
+    machine_type = np.asarray(names)[rng.integers(0, n_machines, size=n)]
+    X = np.empty((n, k + 1))
+    X[:, 0] = rng.integers(1, 64, size=n)                 # scale-out
+    X[:, 1:] = rng.uniform(0.05, 1000.0, size=(n, k)) * scale
+    y = rng.uniform(0.05, 5000.0, size=n) * scale
+    return RuntimeData(schema, machine_type, X, y)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 60), k=st.integers(0, 4), seed=st.integers(0, 10**6),
+       scale=st.sampled_from([0.01, 1.0, 1e3]))
+def test_tsv_roundtrip_property(n, k, seed, scale):
+    """decode(encode(data)) preserves order, machines, features, runtimes —
+    and re-encoding the decoded data is byte-identical (canonical form)."""
+    d = _random_data(np.random.default_rng(seed), n, k, scale)
+    text = d.to_tsv()
+    back = RuntimeData.from_tsv(text, d.schema)
+    assert len(back) == n
+    assert (back.machine_type == d.machine_type).all()
+    np.testing.assert_allclose(back.X, d.X, rtol=1e-5)    # %.6g columns
+    np.testing.assert_allclose(back.y, d.y, rtol=1e-3, atol=1e-4)  # %.4f
+    assert back.to_tsv() == text
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 80), k=st.integers(0, 3), seed=st.integers(0, 10**6),
+       n_chunks=st.integers(1, 6))
+def test_fingerprint_chain_property(n, k, seed, n_chunks):
+    """For ANY split of the rows into contribution deltas, the streaming
+    fingerprint chain equals a full O(N) rehash of the final TSV — and
+    equals the fingerprint of a store built from the whole data at once."""
+    rng = np.random.default_rng(seed)
+    d = _random_data(rng, n, k, 1.0)
+    cuts = np.sort(rng.integers(1, n, size=min(n_chunks, n - 1)))
+    bounds = [0, *dict.fromkeys(cuts.tolist()), n]
+    chunks = [d.subset(np.arange(lo, hi))
+              for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+    # reject thresholds wide open: the property under test is the hash
+    # chain over accepted deltas, not the validator's judgement
+    store = RuntimeDataStore(chunks[0], reject_ratio=1e30, reject_slack=1e30)
+    for c in chunks[1:]:
+        assert store.contribute(c).accepted
+    assert store.version == len(chunks) - 1
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+    assert store.fingerprint == RuntimeDataStore(d).fingerprint
+    assert store.data.to_tsv() == d.to_tsv()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), cap=st.integers(1, 200),
+       n_groups=st.integers(1, 6))
+def test_waterfill_allocation_property(seed, cap, n_groups):
+    """Water-filling: never exceeds the cap, never drops a row that fits,
+    keeps every small group whole, and samples without duplication."""
+    rng = np.random.default_rng(seed)
+    parts = [np.arange(1000 * g, 1000 * g + rng.integers(0, 120))
+             for g in range(n_groups)]
+    out = _waterfill(parts, cap)
+    total = sum(len(p) for p in parts)
+    # exact: the budget is exhausted unless the groups run out of rows
+    # first (smallest-first visiting order makes the allocation tight)
+    assert len(out) == min(cap, total)
+    assert len(np.unique(out)) == len(out)
+    # every group at least min(len(group), cap // n_groups): the rare-
+    # machine floor stratified validation relies on
+    for g, p in enumerate(parts):
+        got = np.sum((out >= 1000 * g) & (out < 1000 * (g + 1)))
+        assert got >= min(len(p), cap // n_groups)

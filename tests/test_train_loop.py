@@ -16,6 +16,7 @@ from repro.train.checkpoint import (CheckpointManager, restore_checkpoint,
 ARCH = "gemma3-1b"
 
 
+@pytest.mark.slow          # ~1 min end-to-end: two training runs + restart
 def test_crash_restart_is_deterministic(tmp_path):
     d1 = str(tmp_path / "a")
     d2 = str(tmp_path / "b")
