@@ -50,9 +50,26 @@ def main():
     new = RuntimeData(repo.schema, np.asarray(["m5.xlarge"]),
                       np.asarray([[choice.scale_out, 18.0, 0.02]]),
                       np.asarray([measured]))
-    report = repo.contribute(new)
+    report = repo.contribute(new, contributor="quickstart-user")
     print(f"contribution validation: accepted={report.accepted} "
           f"({report.reason})")
+
+    # --- the same loop through the API v1 gateway (canonical surface) ----
+    from repro.api import (ChooseRequest, ContributeRequest, SearchRequest)
+    gw = hub.gateway(prices, scaleouts=(2, 3, 4, 6, 8, 12))
+    hit = gw.search(SearchRequest("grep")).result.jobs[0]
+    resp = gw.choose(ChooseRequest(hit.job, (18.0, 0.02), t_max=420.0))
+    c = resp.result
+    print(f"\ngateway: {hit.job} -> {c.machine_type} x{c.scale_out} "
+          f"(bound {c.runtime_bound_s:.0f}s, ${c.cost_usd:.4f})")
+    measured = W._measure("grep", c.machine_type, c.scale_out,
+                          (18.0, 0.02), seed=124)
+    out = gw.contribute(ContributeRequest(
+        hit.job, (c.machine_type,),
+        ((float(c.scale_out), 18.0, 0.02),), (measured,),
+        contributor_id="quickstart-user")).result
+    print(f"gateway contribution: accepted={out.accepted} "
+          f"store_rows={out.store_rows} by {out.contributor_id}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""C3O Hub Gateway API v1 — the canonical public surface.
+
+One versioned, serializable request/response vocabulary for the paper's
+whole collaborative loop (Fig. 4): discover a job (``SearchRequest``),
+predict runtimes (``PredictRequest``), choose a cluster
+(``ChooseRequest``), evaluate models (``ModelErrorsRequest``), and
+contribute runtime data back with provenance (``ContributeRequest``).
+``HubGateway`` routes these across every published ``JobRepo``;
+``repro.api.codec`` gives every envelope a deterministic JSON form so the
+same objects work in-process today and over HTTP later.
+"""
+from repro.api.codec import decode, encode
+from repro.api.gateway import AsyncHubGateway, HubGateway
+from repro.api.types import (API_VERSION, ChooseRequest, ChooseResult,
+                             ContributeRequest, ContributeResult, JobInfo,
+                             ModelErrorsRequest, ModelErrorsResult,
+                             PredictRequest, PredictResult, Response,
+                             SearchRequest, SearchResult)
+
+__all__ = [
+    "API_VERSION", "ChooseRequest", "ChooseResult", "ContributeRequest",
+    "ContributeResult", "JobInfo", "ModelErrorsRequest", "ModelErrorsResult",
+    "PredictRequest", "PredictResult", "Response", "SearchRequest",
+    "SearchResult", "HubGateway", "AsyncHubGateway", "decode", "encode",
+]

@@ -1,0 +1,82 @@
+"""Deterministic JSON codec for the API v1 envelopes.
+
+``encode`` maps any envelope (or plain JSON-able value) to ONE canonical
+byte sequence; ``decode`` inverts it.  Guarantees:
+
+  * byte stability: ``encode(decode(encode(x))) == encode(x)`` — sorted
+    keys, minimal separators, ASCII-escaped unicode, shortest-repr floats;
+  * strict JSON on the wire: non-finite floats (NaN deadlines, infinite
+    bounds) encode as a tagged object ``{"__float__": "nan"|"inf"|"-inf"}``
+    instead of the non-standard ``NaN`` literal, so any JSON parser can
+    read gateway traffic;
+  * type fidelity: every dataclass carries a ``"__type__"`` tag and is
+    reconstructed as the same class; sequences decode as tuples (the
+    envelope field convention), so ``decode(encode(x)) == x`` for every
+    envelope whose float fields are finite.  NaN fields (a no-deadline
+    ``ChooseRequest``) decode back to NaN, where ``==`` is false by IEEE
+    semantics — compare by ``encode`` bytes (``encode(decode(s)) == s``
+    always holds) when identity over NaN payloads matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict
+
+from repro.api import types as T
+
+_TYPES: Dict[str, type] = {cls.__name__: cls for cls in T.MESSAGE_TYPES}
+
+_NONFINITE = {math.inf: "inf", -math.inf: "-inf"}
+
+
+def _to_jsonable(v: Any) -> Any:
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        name = type(v).__name__
+        if name not in _TYPES:
+            raise TypeError(f"not an API v1 message type: {name}")
+        out = {"__type__": name}
+        for f in dataclasses.fields(v):
+            out[f.name] = _to_jsonable(getattr(v, f.name))
+        return out
+    if isinstance(v, float):
+        if math.isnan(v):
+            return {"__float__": "nan"}
+        if math.isinf(v):
+            return {"__float__": _NONFINITE[v]}
+        return v
+    if isinstance(v, (tuple, list)):
+        return [_to_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _to_jsonable(x) for k, x in v.items()}
+    if v is None or isinstance(v, (str, int, bool)):
+        return v
+    raise TypeError(f"unencodable value of type {type(v).__name__}: {v!r}")
+
+
+def _from_jsonable(v: Any) -> Any:
+    if isinstance(v, dict):
+        if "__float__" in v and len(v) == 1:
+            return float(v["__float__"])        # "nan" / "inf" / "-inf"
+        if "__type__" in v:
+            cls = _TYPES[v["__type__"]]
+            kw = {k: _from_jsonable(x) for k, x in v.items()
+                  if k != "__type__"}
+            return cls(**kw)
+        return {k: _from_jsonable(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return tuple(_from_jsonable(x) for x in v)
+    return v
+
+
+def encode(message: Any) -> str:
+    """Canonical JSON text for one envelope (or nested JSON-able value)."""
+    return json.dumps(_to_jsonable(message), sort_keys=True,
+                      separators=(",", ":"), ensure_ascii=True,
+                      allow_nan=False)
+
+
+def decode(text: str) -> Any:
+    """Inverse of ``encode``: reconstructs tagged dataclasses and tuples."""
+    return _from_jsonable(json.loads(text))

@@ -1,0 +1,376 @@
+"""HubGateway: one routed entry point for the whole C3O workflow.
+
+``HubGateway`` serves the five typed API v1 requests across every
+``JobRepo`` published on a ``Hub``, holding per-(job, store-version)
+``ConfigurationService`` state so repeated traffic reuses warm predictors
+and compiled executables.  Every answer is a uniform ``Response``
+envelope; operational failures (unknown job, malformed payload) are error
+envelopes, never raised exceptions — a front-end can serialize whatever
+comes back.
+
+``AsyncHubGateway`` adds per-job micro-batch lanes: concurrent ``choose``
+requests are routed to their job's ``BatchLane`` (``repro.serve``), so a
+mixed multi-job request stream coalesces into ONE
+``ConfigurationService.choose_cluster_batch`` engine dispatch *per job
+per tick* — the single-service micro-batcher generalized to the full hub.
+
+The gateway answers request-for-request identically to the legacy direct
+object path (``JobRepo.predictor_for`` / ``choose_cluster_batch`` /
+``RuntimeDataStore.contribute`` / ``JobRepo.model_errors``);
+``tests/test_api_gateway.py`` pins that parity.
+"""
+from __future__ import annotations
+
+import asyncio
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.types import (ERR_BAD_REQUEST, ERR_INTERNAL, ERR_UNKNOWN_JOB,
+                             ChooseRequest, ChooseResult, ContributeRequest,
+                             ContributeResult, JobInfo, ModelErrorsRequest,
+                             ModelErrorsResult, PredictRequest, PredictResult,
+                             Response, SearchRequest, SearchResult)
+from repro.core.features import RuntimeData
+from repro.core.service import ConfigurationService
+from repro.serve.config_service import BatchLane, ServeStats
+
+
+class UnknownJobError(KeyError):
+    """Request named a job no published repo serves."""
+
+
+class HubGateway:
+    """Routes typed API v1 requests across all published job repos.
+
+    ``prices`` ($ per node-hour per machine type) and ``scaleouts`` are
+    the serving-time configuration grid shared by every job; they would
+    come from the deployment's cloud catalog in production.
+    """
+
+    def __init__(self, hub, prices: Dict[str, float],
+                 scaleouts: Sequence[int], *, confidence: float = 0.95,
+                 seed: int = 0):
+        self.hub = hub
+        self.prices = dict(prices)
+        self.scaleouts = tuple(int(s) for s in scaleouts)
+        self.confidence = confidence
+        self.seed = seed
+        # (job, seed) -> (store version, model-spec objects, service): an
+        # accepted contribution bumps the version and a maintainer's
+        # add_custom_model / spec re-registration changes the spec tuple
+        # (the same invalidation contract JobRepo.predictor_for keeps) —
+        # either lazily rebuilds the service from the repo's (cached,
+        # possibly warm-started) predictors on the next request.
+        # LRU-capped: the seed is CLIENT-supplied, so an uncapped dict
+        # would grow one service per distinct seed in hostile traffic
+        self._services: "OrderedDict[Tuple[str, int], tuple]" = OrderedDict()
+        # job -> ((store version, model names), JobInfo): search /
+        # provenance metadata is recomputed only when the repo actually
+        # changed, not per request
+        self._jobinfo: Dict[str, tuple] = {}
+
+    # ------------------------- routing helpers ----------------------------
+    def _repo(self, job: str):
+        try:
+            return self.hub.get(job)
+        except KeyError:
+            raise UnknownJobError(job) from None
+
+    #: bound on cached per-(job, seed) services (LRU eviction)
+    MAX_SERVICES = 64
+
+    def _service(self, job: str,
+                 seed: Optional[int] = None) -> ConfigurationService:
+        from repro.core.models.api import get_model
+        seed = self.seed if seed is None else int(seed)
+        repo = self._repo(job)
+        version = repo.store.version
+        # key on the spec OBJECTS like predictor_for: a re-registered or
+        # newly added custom model must invalidate the cached service
+        specs = tuple(get_model(n) for n in repo.model_names)
+        entry = self._services.get((job, seed))
+        if entry is None or entry[0] != version or entry[1] != specs:
+            svc = ConfigurationService.from_repo(
+                repo, None, self.prices, self.scaleouts, seed=seed,
+                confidence=self.confidence)
+            self._services[(job, seed)] = entry = (version, specs, svc)
+            while len(self._services) > self.MAX_SERVICES:
+                self._services.popitem(last=False)
+        self._services.move_to_end((job, seed))
+        return entry[2]
+
+    def _rows(self, repo, X, y=None) -> np.ndarray:
+        """Validated [n, d] feature block for ``repo``'s schema."""
+        X = np.asarray(X, np.float64)
+        if X.ndim != 2 or X.shape[1] != repo.schema.n_features:
+            raise ValueError(
+                f"expected [n, {repo.schema.n_features}] feature rows "
+                f"(scale-out first) for job {repo.job!r}, got shape "
+                f"{X.shape}")
+        if y is not None and len(np.asarray(y)) != len(X):
+            raise ValueError(f"{len(X)} feature rows but "
+                             f"{len(np.asarray(y))} runtimes")
+        return X
+
+    def _machine(self, repo, machine_type: str) -> str:
+        if machine_type not in repo.store.data.machines:
+            raise ValueError(
+                f"job {repo.job!r} has no shared runtime data for machine "
+                f"type {machine_type!r} (known: "
+                f"{', '.join(repo.store.data.machines) or 'none'})")
+        return machine_type
+
+    # ------------------------- operations ---------------------------------
+    def predict(self, req: PredictRequest) -> Response[PredictResult]:
+        return self._respond(self._predict, req)
+
+    def _seed(self, seed: Optional[int]) -> int:
+        """Request-level seed override; None means the gateway default."""
+        return self.seed if seed is None else int(seed)
+
+    def _predict(self, req: PredictRequest) -> PredictResult:
+        repo = self._repo(req.job)
+        X = self._rows(repo, req.X)
+        pred = repo.predictor_for(self._machine(repo, req.machine_type),
+                                  seed=self._seed(req.seed))
+        t = pred.predict(X)
+        return PredictResult(tuple(float(v) for v in t), pred.selected,
+                             float(pred.mu), float(pred.sigma))
+
+    def choose(self, req: ChooseRequest) -> Response[ChooseResult]:
+        return self._respond(self._choose, req)
+
+    def _choose(self, req: ChooseRequest) -> ChooseResult:
+        repo = self._repo(req.job)
+        ctx = np.asarray(req.context, np.float64).reshape(-1)
+        if len(ctx) != repo.schema.n_features - 1:
+            raise ValueError(
+                f"context row has width {len(ctx)}, job {repo.job!r} "
+                f"expects {repo.schema.n_features - 1}")
+        choice = self._service(req.job, req.seed).choose_cluster_batch(
+            ctx[None, :], np.asarray([req.t_max], np.float64))[0]
+        return ChooseResult.from_choice(choice)
+
+    def contribute(self, req: ContributeRequest) -> Response[ContributeResult]:
+        return self._respond(self._contribute, req)
+
+    def _contribute(self, req: ContributeRequest) -> ContributeResult:
+        repo = self._repo(req.job)
+        X = self._rows(repo, req.X, req.y)
+        if len(req.machine_type) != len(X):
+            raise ValueError(f"{len(X)} feature rows but "
+                             f"{len(req.machine_type)} machine types")
+        # machine names / contributor ids that the TSV codec cannot
+        # round-trip are rejected by the store itself (ValueError ->
+        # bad_request envelope)
+        rows = RuntimeData(repo.schema, np.asarray(req.machine_type), X,
+                           np.asarray(req.y, np.float64))
+        report = repo.contribute(rows, contributor=req.contributor_id)
+        return ContributeResult(
+            bool(report.accepted), float(report.baseline_mape),
+            float(report.candidate_mape), report.reason, req.contributor_id,
+            len(repo.store), repo.store.version, repo.store.fingerprint)
+
+    def model_errors(self, req: ModelErrorsRequest
+                     ) -> Response[ModelErrorsResult]:
+        return self._respond(self._model_errors, req)
+
+    def _model_errors(self, req: ModelErrorsRequest) -> ModelErrorsResult:
+        repo = self._repo(req.job)
+        X = self._rows(repo, req.X, req.y)
+        machine = self._machine(repo, req.machine_type)
+        test = RuntimeData(repo.schema, np.full(len(X), machine), X,
+                           np.asarray(req.y, np.float64))
+        errs, selected = repo.model_errors(
+            machine, test, track_models=req.track_models,
+            seed=self._seed(req.seed))
+        table = tuple((m, float(mape), float(mae))
+                      for m, (mape, mae) in sorted(errs.items()))
+        return ModelErrorsResult(table, selected)
+
+    def search(self, req: SearchRequest) -> Response[SearchResult]:
+        return self._respond(self._search, req)
+
+    def _job_info(self, repo) -> JobInfo:
+        """Per-(job, store version) cached metadata: contributor counts
+        and machine lists are O(rows) scans that only change when a
+        contribution is accepted — not per search request."""
+        key = (repo.store.version, tuple(repo.model_names))
+        entry = self._jobinfo.get(repo.job)
+        if entry is None or entry[0] != key:
+            data = repo.store.data
+            info = JobInfo(
+                repo.job, repo.algorithm, len(data),
+                data.present_machines(), key[1],
+                tuple(sorted(data.contributor_counts().items())))
+            self._jobinfo[repo.job] = entry = (key, info)
+        return entry[1]
+
+    def _search(self, req: SearchRequest) -> SearchResult:
+        return SearchResult(tuple(
+            self._job_info(repo)
+            for repo in sorted(self.hub.search(req.algorithm),
+                               key=lambda r: r.job)))
+
+    def contributor_stats(self, job: str) -> Response[Tuple[Tuple[str, int],
+                                                            ...]]:
+        """Per-contributor row counts for one job's shared store."""
+        return self._respond(
+            lambda j: tuple(sorted(
+                self._repo(j).store.data.contributor_counts().items())), job)
+
+    # ------------------------- uniform dispatch ---------------------------
+    _HANDLERS = {
+        PredictRequest: "predict", ChooseRequest: "choose",
+        ContributeRequest: "contribute", ModelErrorsRequest: "model_errors",
+        SearchRequest: "search",
+    }
+
+    def handle(self, request) -> Response:
+        """Serve any API v1 request object (front-end dispatch point)."""
+        name = self._HANDLERS.get(type(request))
+        if name is None:
+            return Response.failure(
+                ERR_BAD_REQUEST,
+                f"not an API v1 request: {type(request).__name__}")
+        return getattr(self, name)(request)
+
+    def _respond(self, fn, req) -> Response:
+        try:
+            return Response.success(fn(req))
+        except UnknownJobError as e:
+            return Response.failure(ERR_UNKNOWN_JOB,
+                                    f"no published repo for job {e.args[0]!r}")
+        except (ValueError, TypeError, KeyError) as e:
+            return Response.failure(ERR_BAD_REQUEST, str(e))
+        except Exception as e:                       # noqa: BLE001
+            return Response.failure(ERR_INTERNAL,
+                                    f"{type(e).__name__}: {e}")
+
+
+class AsyncHubGateway:
+    """Per-job micro-batch lanes over a ``HubGateway``.
+
+    Concurrent ``choose`` requests are enqueued on their job's
+    ``BatchLane``; each lane answers everything pending per tick with one
+    ``choose_cluster_batch`` engine dispatch, resolving the job's CURRENT
+    service each tick so accepted contributions take effect without lane
+    restarts.  Non-choose operations pass through to the sync gateway
+    (they are not dispatch-bound).
+
+        async with AsyncHubGateway(gateway) as agw:
+            resp = await agw.choose(ChooseRequest(job="grep", ...))
+    """
+
+    #: bound on live lanes: the seed is client-supplied, and every lane
+    #: owns a worker task — hostile seed churn must not grow them forever.
+    #: Evicting a lane cancels whatever is still queued on it, so the cap
+    #: only bites under seed-spraying traffic, never steady serving.
+    MAX_LANES = 64
+
+    def __init__(self, gateway: HubGateway, *, max_batch: int = 256,
+                 tick_s: float = 0.0):
+        self.gateway = gateway
+        self.max_batch = max_batch
+        self.tick_s = tick_s
+        self._lanes: "OrderedDict[str, BatchLane]" = OrderedDict()
+        # strong refs to in-flight eviction stop() tasks: the event loop
+        # only holds tasks weakly, and a GC'd stop task would leak the
+        # evicted lane's worker
+        self._stopping: set = set()
+
+    # ------------------------- lifecycle ----------------------------------
+    async def __aenter__(self) -> "AsyncHubGateway":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    async def stop(self) -> None:
+        lanes, self._lanes = self._lanes, OrderedDict()
+        # dropped, not retained: a request after stop() would otherwise
+        # enqueue onto a lane whose worker is gone and hang forever —
+        # fresh lanes are created (and started) on the next choose().
+        # In-flight eviction stops are awaited too, so shutdown leaves no
+        # dangling worker
+        await asyncio.gather(*(lane.stop() for lane in lanes.values()),
+                             *list(self._stopping))
+
+    # ------------------------- lanes --------------------------------------
+    def _lane(self, job: str, seed: Optional[int]) -> BatchLane:
+        # one lane per (job, seed): requests with different seeds answer
+        # from different predictor states and must not share a dispatch.
+        # Keyed on the TUPLE — a job literally named "x#seed=1" must not
+        # collide with job "x" at seed 1; the formatted name is display
+        # only (lane_stats)
+        seed = self.gateway._seed(seed)
+        key = (job, seed)
+        lane = self._lanes.get(key)
+        if lane is None:
+            repo = self.gateway._repo(job)        # raises UnknownJobError
+
+            def dispatch(contexts, t_max, _job=job, _seed=seed):
+                # resolve the service at dispatch time: a contribution
+                # accepted between ticks rebuilds it (store-version keyed).
+                # The whole tick's envelopes are built here in one tight
+                # loop — per-request coroutines just hand the finished
+                # Response through
+                choices = self.gateway._service(
+                    _job, _seed).choose_cluster_batch(contexts, t_max)
+                return [Response.success(ChooseResult.from_choice(c))
+                        for c in choices]
+
+            lane = BatchLane(dispatch, width=repo.schema.n_features - 1,
+                             max_batch=self.max_batch, tick_s=self.tick_s)
+            lane.start()
+            self._lanes[key] = lane
+            while len(self._lanes) > self.MAX_LANES:
+                _, old = self._lanes.popitem(last=False)   # LRU lane
+                task = asyncio.get_running_loop().create_task(old.stop())
+                self._stopping.add(task)
+                task.add_done_callback(self._stopping.discard)
+        self._lanes.move_to_end(key)
+        return lane
+
+    @property
+    def lane_stats(self) -> Dict[str, ServeStats]:
+        """Stats per lane, named ``job`` for the default seed and
+        ``job#seed=N`` otherwise (display names; routing uses tuples)."""
+        out = {}
+        for (job, seed), lane in self._lanes.items():
+            name = job if seed == self.gateway.seed else f"{job}#seed={seed}"
+            out[name] = lane.stats
+        return out
+
+    # ------------------------- request path -------------------------------
+    async def choose(self, req: ChooseRequest) -> Response[ChooseResult]:
+        try:
+            lane = self._lane(req.job, req.seed)
+            # submit() canonicalizes the row; the lane dispatch already
+            # wrapped the answer in a Response envelope
+            return await lane.submit(req.context, req.t_max)
+        except UnknownJobError as e:
+            return Response.failure(
+                ERR_UNKNOWN_JOB, f"no published repo for job {e.args[0]!r}")
+        except (ValueError, TypeError) as e:
+            # same classification as the sync path's _respond: a payload
+            # the lane cannot parse is the CLIENT's error, not a fault
+            return Response.failure(ERR_BAD_REQUEST, str(e))
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:                       # noqa: BLE001
+            return Response.failure(ERR_INTERNAL,
+                                    f"{type(e).__name__}: {e}")
+
+    def handle(self, request) -> Response:
+        """Synchronous pass-through for non-choose operations."""
+        return self.gateway.handle(request)
+
+    async def handle_async(self, request) -> Response:
+        """Uniform async dispatch: choose requests ride the micro-batch
+        lanes, everything else serves inline."""
+        if isinstance(request, ChooseRequest):
+            return await self.choose(request)
+        return self.gateway.handle(request)

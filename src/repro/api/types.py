@@ -1,0 +1,187 @@
+"""Typed request/response envelopes for the Hub Gateway API v1.
+
+Every message is a frozen dataclass built from JSON-serializable scalars
+and (nested) tuples only — no numpy arrays, no live objects — so one
+envelope value round-trips deterministically through ``repro.api.codec``
+and works identically in-process and over a wire.  Conventions:
+
+  * feature rows are tuples of floats with scale-out FIRST (the repo-wide
+    feature layout, see ``repro.core.features``);
+  * ``ChooseRequest.context`` is the context row WITHOUT scale-out — the
+    gateway sweeps the (machine x scale-out) grid for it;
+  * a NaN deadline means "no deadline" (the micro-batch lanes pack
+    heterogeneous requests into one dispatch that way);
+  * operation outcomes that are *answers* (e.g. a rejected contribution)
+    travel as ``status="ok"`` results; ``status="error"`` is reserved for
+    requests the gateway could not serve (unknown job, malformed payload,
+    internal failure) and carries a machine-readable ``error_code``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Generic, Optional, Tuple, TypeVar
+
+API_VERSION = "v1"
+
+#: machine-readable error codes carried by error envelopes
+ERR_UNKNOWN_JOB = "unknown_job"
+ERR_BAD_REQUEST = "bad_request"
+ERR_INTERNAL = "internal"
+
+T = TypeVar("T")
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, slots=True)
+class PredictRequest:
+    """Predict runtimes for explicit feature rows on one machine type."""
+    job: str
+    machine_type: str
+    X: Tuple[Tuple[float, ...], ...]      # [n, d] rows, scale-out first
+    seed: Optional[int] = None            # None = gateway's default seed
+
+
+@dataclass(frozen=True, slots=True)
+class ChooseRequest:
+    """Best (machine type, scale-out) for one execution context."""
+    job: str
+    context: Tuple[float, ...]            # context row (no scale-out)
+    t_max: float = math.nan               # deadline seconds; NaN = none
+    seed: Optional[int] = None            # None = gateway's default seed
+
+
+@dataclass(frozen=True, slots=True)
+class ContributeRequest:
+    """Runtime measurements flowing back to the shared store (workflow
+    step 6), stamped with the contributing collaborator's identity."""
+    job: str
+    machine_type: Tuple[str, ...]         # per-row machine names
+    X: Tuple[Tuple[float, ...], ...]      # [n, d] rows, scale-out first
+    y: Tuple[float, ...]                  # measured runtimes (seconds)
+    contributor_id: str = "unknown"
+
+
+@dataclass(frozen=True, slots=True)
+class ModelErrorsRequest:
+    """Held-out (MAPE, MAE) of tracked models + the C3O predictor on
+    caller-supplied test rows for one machine type."""
+    job: str
+    machine_type: str
+    X: Tuple[Tuple[float, ...], ...]
+    y: Tuple[float, ...]
+    track_models: Optional[Tuple[str, ...]] = None
+    seed: Optional[int] = None            # None = gateway's default seed
+
+
+@dataclass(frozen=True, slots=True)
+class SearchRequest:
+    """Discover published job repos by algorithm/job substring."""
+    algorithm: str = ""
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, slots=True)
+class PredictResult:
+    runtimes_s: Tuple[float, ...]
+    selected_model: str
+    mu: float                             # CV error calibration (paper §IV-B)
+    sigma: float
+
+
+@dataclass(frozen=True, slots=True)
+class ChooseResult:
+    """Wire form of ``repro.core.configurator.ClusterChoice``."""
+    machine_type: str
+    scale_out: int
+    predicted_runtime_s: float
+    runtime_bound_s: float
+    cost_usd: float
+    bottleneck: bool
+
+    @classmethod
+    def from_choice(cls, choice) -> "ChooseResult":
+        return cls(choice.machine_type, choice.scale_out,
+                   choice.predicted_runtime_s, choice.runtime_bound_s,
+                   choice.cost_usd, choice.bottleneck)
+
+    def to_choice(self):
+        from repro.core.configurator import ClusterChoice
+        return ClusterChoice(self.machine_type, self.scale_out,
+                             self.predicted_runtime_s, self.runtime_bound_s,
+                             self.cost_usd, self.bottleneck)
+
+
+@dataclass(frozen=True, slots=True)
+class ContributeResult:
+    """Validation verdict (paper §III-C.b) plus post-ingest store state."""
+    accepted: bool
+    baseline_mape: float
+    candidate_mape: float
+    reason: str
+    contributor_id: str
+    store_rows: int
+    store_version: int
+    fingerprint: str
+
+
+@dataclass(frozen=True, slots=True)
+class ModelErrorsResult:
+    errors: Tuple[Tuple[str, float, float], ...]   # (model, mape, mae)
+    selected_model: str
+
+
+@dataclass(frozen=True, slots=True)
+class JobInfo:
+    """One search hit: repo metadata + provenance stats."""
+    job: str
+    algorithm: str
+    rows: int
+    machines: Tuple[str, ...]
+    models: Tuple[str, ...]
+    contributors: Tuple[Tuple[str, int], ...]      # (contributor, rows)
+
+
+@dataclass(frozen=True, slots=True)
+class SearchResult:
+    jobs: Tuple[JobInfo, ...]
+
+
+# ---------------------------------------------------------------------------
+# the uniform envelope
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, slots=True)
+class Response(Generic[T]):
+    """Uniform response envelope: ``status`` is ``"ok"`` (``result`` holds
+    the typed payload) or ``"error"`` (``error_code``/``detail`` say why;
+    ``result`` is None)."""
+    status: str
+    result: Optional[T] = None
+    error_code: str = ""
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    @classmethod
+    def success(cls, result: T) -> "Response[T]":
+        return cls("ok", result)
+
+    @classmethod
+    def failure(cls, error_code: str, detail: str) -> "Response[T]":
+        return cls("error", None, error_code, detail)
+
+
+REQUEST_TYPES = (PredictRequest, ChooseRequest, ContributeRequest,
+                 ModelErrorsRequest, SearchRequest)
+RESULT_TYPES = (PredictResult, ChooseResult, ContributeResult,
+                ModelErrorsResult, JobInfo, SearchResult)
+MESSAGE_TYPES = REQUEST_TYPES + RESULT_TYPES + (Response,)

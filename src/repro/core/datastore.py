@@ -221,15 +221,50 @@ class RuntimeDataStore:
         return ValidationReport(True, worst.baseline_mape,
                                 worst.candidate_mape, worst.reason + note)
 
-    def contribute(self, contribution: RuntimeData) -> ValidationReport:
+    def contribute(self, contribution: RuntimeData,
+                   contributor: Optional[str] = None) -> ValidationReport:
         """Validate and (if accepted) ingest incrementally: columnar append
         into tail capacity plus an O(delta) fingerprint-chain advance — the
-        stored rows are never re-encoded or re-hashed."""
+        stored rows are never re-encoded or re-hashed.
+
+        ``contributor`` stamps every contributed row with one collaborator
+        identity (gateway provenance); rows already carrying per-row
+        provenance are ingested as-is when it is None.  The first known
+        contributor transitions the store's canonical TSV encoding to the
+        provenance format, which re-seeds the fingerprint chain from the
+        full re-encoded content once (O(N)); before and after the
+        transition the chain advances per delta as usual, so the
+        fingerprint always equals ``sha256(data.to_tsv())`` — and a store
+        that never sees provenance keeps byte-identical legacy
+        fingerprints."""
+        from repro.core.features import check_tsv_field
+        # every ingest path (gateway, JobRepo, replay) funnels here: a
+        # machine name or contributor id the TSV codec cannot round-trip
+        # must never reach the persisted store — including per-row
+        # provenance carried by the contribution itself (which bypasses
+        # the constructors' own validation via from_columns)
+        for m in contribution.machines:
+            check_tsv_field(m, "machine type")
+        for c in contribution.contributors:
+            check_tsv_field(c, "contributor id")
+        if contributor is not None:
+            contribution = contribution.with_contributor(contributor)
         report = self.validate(contribution)
         if report.accepted:
+            was_provenance = self._data.has_provenance
             # bypass the data setter: the append only adds the delta rows,
             # so the chained hash advances in O(delta), not O(N)
             self._data = self._data.append(contribution)
-            self._hasher.update(contribution.tsv_delta_bytes())
+            if not was_provenance and self._data.has_provenance:
+                # encoding transition: every stored row gained the
+                # contributor column, so the old chain's bytes no longer
+                # prefix the canonical encoding — re-seed once
+                self._hasher = hashlib.sha256(self._data.to_tsv().encode())
+            else:
+                # delta bytes in the STORE's format: a provenance-format
+                # store encodes even an unknown-contributor delta with the
+                # contributor column
+                self._hasher.update(
+                    contribution.tsv_delta_bytes(was_provenance))
             self._version += 1
         return report

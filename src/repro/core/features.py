@@ -35,6 +35,12 @@ VIEW_STATS: Dict[str, int] = {
     "x_extends": 0,               # assembled-X extended in place by new rows
 }
 
+#: default contributor identity for rows whose provenance is unrecorded —
+#: every pre-provenance store decodes to this (the TSV format without a
+#: contributor column is the canonical encoding for such data, so legacy
+#: files keep their fingerprints byte-for-byte)
+UNKNOWN_CONTRIBUTOR = "unknown"
+
 
 def view_stats_reset() -> None:
     for k in VIEW_STATS:
@@ -59,6 +65,13 @@ class JobSchema:
     def columns(self) -> Tuple[str, ...]:
         return ("machine_type",) + self.feature_names + ("runtime_s",)
 
+    @property
+    def columns_with_provenance(self) -> Tuple[str, ...]:
+        """TSV header once any row carries a known contributor: the
+        contributor column rides at the end so numeric parsing of the
+        legacy prefix is unchanged."""
+        return self.columns + ("contributor",)
+
 
 class _Columns:
     """Growable column buffers shared by ``RuntimeData`` frontier views.
@@ -70,14 +83,16 @@ class _Columns:
     buffer growth.
     """
 
-    __slots__ = ("codes", "scale_out", "context", "runtime", "used",
-                 "xbuf", "xrows")
+    __slots__ = ("codes", "scale_out", "context", "runtime", "ccodes",
+                 "used", "xbuf", "xrows")
 
-    def __init__(self, codes, scale_out, context, runtime):
+    def __init__(self, codes, scale_out, context, runtime, ccodes=None):
         self.codes = np.ascontiguousarray(codes, np.int32)
         self.scale_out = np.ascontiguousarray(scale_out, np.float64)
         self.context = np.ascontiguousarray(context, np.float64)
         self.runtime = np.ascontiguousarray(runtime, np.float64)
+        self.ccodes = (np.zeros(len(self.codes), np.int32) if ccodes is None
+                       else np.ascontiguousarray(ccodes, np.int32))
         self.used = len(self.codes)
         self.xbuf = None          # [capacity, 1+k] assembled-X mirror (lazy)
         self.xrows = 0            # valid assembled rows (<= used)
@@ -92,7 +107,7 @@ class _Columns:
         cap = max(8, 2 * self.capacity)
         while cap < need:
             cap *= 2
-        for name in ("codes", "scale_out", "runtime"):
+        for name in ("codes", "scale_out", "runtime", "ccodes"):
             old = getattr(self, name)
             new = np.empty(cap, old.dtype)
             new[:self.used] = old[:self.used]
@@ -129,6 +144,45 @@ class _Columns:
         return self.xbuf[:n]
 
 
+def check_tsv_field(value: str, what: str = "field") -> str:
+    """A string destined for a TSV column must survive the codec round
+    trip byte-for-byte: no tab (the delimiter), no line-breaking
+    character (``splitlines`` splits on \\v, \\f, \\x1c-\\x1e, \\x85,
+    U+2028/U+2029 too, shearing the persisted store), and no leading or
+    trailing whitespace (the parser strips it, silently changing the
+    value — and therefore the fingerprint — on reload); not empty (a
+    trailing empty field is dropped on reload, shifting every column)."""
+    value = str(value)
+    if (not value or "\t" in value or len(value.splitlines()) > 1
+            or value != value.strip()):
+        raise ValueError(
+            f"{what} {value!r} would not survive the TSV codec "
+            "(empty, tab, line-breaking character, or leading/trailing "
+            "whitespace): it would corrupt the store's canonical "
+            "encoding")
+    return value
+
+
+def check_contributor_id(name: str) -> str:
+    """Contributor ids live in a TSV column; reject at the door anything
+    the codec cannot round-trip."""
+    return check_tsv_field(name, "contributor id")
+
+
+def _contributor_columns(contributor, n: int):
+    """(vocabulary, int32 codes) for a per-row/scalar/absent contributor."""
+    if contributor is None:
+        return (UNKNOWN_CONTRIBUTOR,), np.zeros(n, np.int32)
+    if isinstance(contributor, str):
+        return (check_contributor_id(contributor),), np.zeros(n, np.int32)
+    names = np.asarray(contributor)
+    if not len(names):
+        return (UNKNOWN_CONTRIBUTOR,), np.empty(0, np.int32)
+    vocab, ccodes = np.unique(names, return_inverse=True)
+    return (tuple(check_contributor_id(c) for c in vocab),
+            ccodes.astype(np.int32))
+
+
 class RuntimeData:
     """Columnar runtime data for one job (struct-of-arrays).
 
@@ -138,14 +192,23 @@ class RuntimeData:
       ``context``    float64 [n, d-1] remaining features (data size + job
                      context), in ``schema.feature_names[1:]`` order
       ``runtime``    float64 measured runtime in seconds
+      ``ccodes``     int32 indices into the ``contributors`` vocabulary
+                     (provenance: which collaborator measured the row)
 
     ``machine_type`` / ``X`` / ``y`` are assembled-on-demand compatibility
     views (cached); hot paths should consume the columns directly or go
-    through ``machine_view`` for the cached per-machine batch.
+    through ``machine_view`` for the cached per-machine batch.  Provenance
+    is metadata, never a model feature: predictors and validation ignore
+    the contributor column entirely.
     """
 
-    def __init__(self, schema: JobSchema, machine_type, X, y):
-        """Row-oriented compatibility constructor (decodes to columns)."""
+    def __init__(self, schema: JobSchema, machine_type, X, y,
+                 contributor=None):
+        """Row-oriented compatibility constructor (decodes to columns).
+
+        ``contributor`` may be a per-row array of contributor ids or a
+        single id for every row; omitted means provenance unrecorded
+        (``UNKNOWN_CONTRIBUTOR``)."""
         X = np.asarray(X, np.float64)
         if X.ndim != 2:
             X = X.reshape(-1, schema.n_features)
@@ -155,31 +218,37 @@ class RuntimeData:
             machines = tuple(str(m) for m in machines)
         else:
             machines, codes = (), np.empty(0, np.int32)
+        contributors, ccodes = _contributor_columns(contributor, len(codes))
         self._init(schema, machines,
                    _Columns(codes, X[:, 0], X[:, 1:],
-                            np.asarray(y, np.float64)),
-                   len(codes))
+                            np.asarray(y, np.float64), ccodes),
+                   len(codes), contributors)
 
-    def _init(self, schema, machines, cols, n):
+    def _init(self, schema, machines, cols, n,
+              contributors=(UNKNOWN_CONTRIBUTOR,)):
         self.schema = schema
         self.machines = tuple(machines)
+        self.contributors = tuple(contributors)
         self._cols = cols
         self._n = int(n)
         self._mindex = {}            # machine -> row-index array (cached)
         self._mview = {}             # machine -> RuntimeData (cached)
         self._X = None               # assembled [n, d] cache
+        self._has_prov = None        # lazy has_provenance (append-carried)
 
     @classmethod
     def from_columns(cls, schema: JobSchema, machines: Sequence[str],
-                     codes, scale_out, context, runtime) -> "RuntimeData":
+                     codes, scale_out, context, runtime, *,
+                     contributors: Sequence[str] = (UNKNOWN_CONTRIBUTOR,),
+                     ccodes=None) -> "RuntimeData":
         """Zero-copy columnar constructor (arrays are adopted, not copied,
         when already contiguous with the right dtype)."""
         self = cls.__new__(cls)
         context = np.asarray(context, np.float64)
         if context.ndim != 2:
             context = context.reshape(len(np.atleast_1d(scale_out)), -1)
-        cols = _Columns(codes, scale_out, context, runtime)
-        self._init(schema, machines, cols, cols.used)
+        cols = _Columns(codes, scale_out, context, runtime, ccodes)
+        self._init(schema, machines, cols, cols.used, contributors)
         return self
 
     @classmethod
@@ -205,8 +274,58 @@ class RuntimeData:
     def runtime(self) -> np.ndarray:
         return self._cols.runtime[:self._n]
 
+    @property
+    def ccodes(self) -> np.ndarray:
+        return self._cols.ccodes[:self._n]
+
     def __len__(self) -> int:
         return self._n
+
+    # ---------------- contributor provenance -------------------------------
+    @property
+    def contributor(self) -> np.ndarray:
+        """[n] contributor-id strings (decoded from codes on demand)."""
+        if not self.contributors:
+            return np.empty(self._n, dtype="<U1")
+        return np.asarray(self.contributors)[self.ccodes]
+
+    @property
+    def has_provenance(self) -> bool:
+        """True when any row carries a KNOWN contributor.  Decides the TSV
+        encoding: provenance-free data keeps the legacy column set, so
+        pre-provenance files round-trip byte-identically (same
+        fingerprint); once a known contributor appears the canonical
+        encoding gains the trailing ``contributor`` column.
+
+        Computed at most once per object — the full-column scan only runs
+        when the vocabulary is ambiguous — and carried forward by
+        ``append`` (rows are append-only, so ``merged = self or delta``),
+        keeping ``contribute`` O(delta) on provenance-format stores."""
+        if self._has_prov is None:
+            if self._n == 0 or all(c == UNKNOWN_CONTRIBUTOR
+                                   for c in self.contributors):
+                self._has_prov = False
+            else:
+                used = np.unique(self.ccodes)
+                self._has_prov = any(
+                    self.contributors[c] != UNKNOWN_CONTRIBUTOR
+                    for c in used)
+        return self._has_prov
+
+    def with_contributor(self, contributor_id: str) -> "RuntimeData":
+        """Same rows stamped with one contributor identity (shares every
+        non-provenance column buffer; used by ``RuntimeDataStore.contribute``
+        to thread the gateway's ``contributor_id`` into the store)."""
+        return RuntimeData.from_columns(
+            self.schema, self.machines, self.codes, self.scale_out,
+            self.context, self.runtime,
+            contributors=(check_contributor_id(contributor_id),),
+            ccodes=np.zeros(self._n, np.int32))
+
+    def contributor_counts(self) -> Dict[str, int]:
+        """Rows per contributor id (provenance stats for the gateway)."""
+        used, counts = np.unique(self.ccodes, return_counts=True)
+        return {self.contributors[c]: int(k) for c, k in zip(used, counts)}
 
     # ---------------- assembled compatibility views ------------------------
     @property
@@ -243,10 +362,12 @@ class RuntimeData:
     def _detach(self) -> None:
         if self._cols.used != self._n or self._cols.capacity != self._n:
             self._cols = _Columns(self.codes.copy(), self.scale_out.copy(),
-                                  self.context.copy(), self.runtime.copy())
+                                  self.context.copy(), self.runtime.copy(),
+                                  self.ccodes.copy())
         else:
             self._cols = _Columns(self._cols.codes, self._cols.scale_out,
-                                  self._cols.context, self._cols.runtime)
+                                  self._cols.context, self._cols.runtime,
+                                  self._cols.ccodes)
 
     # ---------------- per-machine index views ------------------------------
     def machine_code(self, machine: str) -> int:
@@ -292,9 +413,11 @@ class RuntimeData:
         Mutating the clone's ``y`` detaches it onto private buffers, so the
         original — e.g. the cached ``machine_view`` — is untouched."""
         out = RuntimeData.__new__(RuntimeData)
-        out._init(self.schema, self.machines, self._cols, self._n)
+        out._init(self.schema, self.machines, self._cols, self._n,
+                  self.contributors)
         out._X = self._X
         out._mindex = dict(self._mindex)
+        out._has_prov = self._has_prov
         return out
 
     def filter_machine(self, machine: str) -> "RuntimeData":
@@ -308,20 +431,27 @@ class RuntimeData:
         idx = np.asarray(idx)
         return RuntimeData.from_columns(
             self.schema, self.machines, self.codes[idx], self.scale_out[idx],
-            self.context[idx], self.runtime[idx])
+            self.context[idx], self.runtime[idx],
+            contributors=self.contributors, ccodes=self.ccodes[idx])
+
+    @staticmethod
+    def _merge_names(ours: Sequence[str], theirs: Sequence[str],
+                     their_codes: np.ndarray):
+        """(merged vocabulary, their codes remapped into it)."""
+        merged = list(ours)
+        lut = {m: i for i, m in enumerate(merged)}
+        remap = np.empty(max(len(theirs), 1), np.int32)
+        for j, m in enumerate(theirs):
+            if m not in lut:
+                lut[m] = len(merged)
+                merged.append(m)
+            remap[j] = lut[m]
+        out = remap[their_codes] if len(their_codes) else their_codes
+        return tuple(merged), out
 
     def _merged_vocab(self, other: "RuntimeData"):
-        """(merged vocabulary, other's codes remapped into it)."""
-        machines = list(self.machines)
-        lut = {m: i for i, m in enumerate(machines)}
-        remap = np.empty(max(len(other.machines), 1), np.int32)
-        for j, m in enumerate(other.machines):
-            if m not in lut:
-                lut[m] = len(machines)
-                machines.append(m)
-            remap[j] = lut[m]
-        ocodes = remap[other.codes] if len(other) else other.codes
-        return tuple(machines), ocodes
+        """(merged machine vocabulary, other's codes remapped into it)."""
+        return self._merge_names(self.machines, other.machines, other.codes)
 
     def append(self, other: "RuntimeData") -> "RuntimeData":
         """Columnar append in amortized O(len(other)).
@@ -336,21 +466,28 @@ class RuntimeData:
         if len(other) == 0:
             return self
         machines, ocodes = self._merged_vocab(other)
+        contributors, occodes = self._merge_names(
+            self.contributors, other.contributors, other.ccodes)
         m = len(other)
         n = self._n
         cols = self._cols
         if cols.used != n or cols.context.shape[1] != other.context.shape[1]:
             cols = _Columns(self.codes.copy(), self.scale_out.copy(),
-                            self.context.copy(), self.runtime.copy())
+                            self.context.copy(), self.runtime.copy(),
+                            self.ccodes.copy())
         if n + m > cols.capacity:
             cols.grow(n + m)
         cols.codes[n:n + m] = ocodes
         cols.scale_out[n:n + m] = other.scale_out
         cols.context[n:n + m] = other.context
         cols.runtime[n:n + m] = other.runtime
+        cols.ccodes[n:n + m] = occodes
         cols.used = n + m
         out = RuntimeData.__new__(RuntimeData)
-        out._init(self.schema, machines, cols, n + m)
+        out._init(self.schema, machines, cols, n + m, contributors)
+        # rows are append-only, so the provenance flag composes: one O(N)
+        # evaluation at the head of an append chain, O(delta) after
+        out._has_prov = self.has_provenance or other.has_provenance
         # carry cached per-machine indices forward with just the delta rows
         for machine, pidx in self._mindex.items():
             code = machines.index(machine) if machine in machines else -1
@@ -369,7 +506,8 @@ class RuntimeData:
                 delta = RuntimeData.from_columns(
                     other.schema, machines, ocodes[didx],
                     other.scale_out[didx], other.context[didx],
-                    other.runtime[didx])
+                    other.runtime[didx],
+                    contributors=contributors, ccodes=occodes[didx])
                 out._mview[machine] = view.append(delta)
             else:
                 out._mview[machine] = view
@@ -379,45 +517,66 @@ class RuntimeData:
         return self.append(other)
 
     # ---------------- TSV (the sharing format, paper §VI-A) ----------------
-    def tsv_lines(self) -> np.ndarray:
+    def tsv_lines(self, with_contributor: Optional[bool] = None) -> np.ndarray:
         """Canonical per-row TSV lines (no header, no newlines) as a string
-        array — the unit of the datastore's chained fingerprint."""
+        array — the unit of the datastore's chained fingerprint.
+
+        ``with_contributor`` selects the encoding; None means "whatever is
+        canonical for this data" (``has_provenance``).  Callers advancing a
+        fingerprint chain pass the STORE's format explicitly so delta bytes
+        match the full encoding even when the delta itself is provenance-
+        free."""
         if self._n == 0:
             return np.empty(0, dtype=object)
+        if with_contributor is None:
+            with_contributor = self.has_provenance
         out = self.machine_type.astype(object)
         X = self.X
         for j in range(X.shape[1]):
             out = out + "\t" + np.char.mod("%.6g", X[:, j]).astype(object)
-        return out + "\t" + np.char.mod("%.4f", self.runtime).astype(object)
+        out = out + "\t" + np.char.mod("%.4f", self.runtime).astype(object)
+        if with_contributor:
+            out = out + "\t" + self.contributor.astype(object)
+        return out
 
-    def tsv_delta_bytes(self) -> bytes:
+    def tsv_delta_bytes(self, with_contributor: Optional[bool] = None
+                        ) -> bytes:
         """This view's rows in canonical TSV byte form (one trailing newline
         per row) — what an append contributes to the fingerprint chain."""
-        lines = self.tsv_lines()
+        lines = self.tsv_lines(with_contributor)
         if not len(lines):
             return b""
         return ("\n".join(lines) + "\n").encode()
 
     def to_tsv(self) -> str:
-        header = "\t".join(self.schema.columns) + "\n"
-        return header + self.tsv_delta_bytes().decode()
+        prov = self.has_provenance
+        header = "\t".join(self.schema.columns_with_provenance if prov
+                           else self.schema.columns) + "\n"
+        return header + self.tsv_delta_bytes(prov).decode()
 
     @classmethod
     def from_tsv(cls, text: str, schema: JobSchema) -> "RuntimeData":
         lines = text.strip().splitlines()
-        header = lines[0].split("\t") if lines else []
-        assert tuple(header) == schema.columns, \
+        header = tuple(lines[0].split("\t")) if lines else ()
+        prov = header == schema.columns_with_provenance
+        assert prov or header == schema.columns, \
             f"schema mismatch: {header} vs {schema.columns}"
         body = [ln for ln in lines[1:] if ln]
         if not body:
             return cls.empty(schema)
         arr = np.loadtxt(io.StringIO("\n".join(body)), dtype=str,
                          delimiter="\t", ndmin=2, comments=None)
-        nums = arr[:, 1:].astype(np.float64)
+        stop = -1 if prov else arr.shape[1]
+        nums = arr[:, 1:stop].astype(np.float64)
         machines, codes = np.unique(arr[:, 0], return_inverse=True)
+        if prov:
+            contributors, ccodes = _contributor_columns(arr[:, -1], len(arr))
+        else:
+            contributors, ccodes = _contributor_columns(None, len(arr))
         return cls.from_columns(schema, tuple(str(m) for m in machines),
                                 codes, nums[:, 0], nums[:, 1:-1],
-                                nums[:, -1])
+                                nums[:, -1], contributors=contributors,
+                                ccodes=ccodes)
 
 
 def assemble_X(scale_out: np.ndarray, context: np.ndarray,

@@ -189,13 +189,25 @@ class JobRepo:
         return Configurator(self.predictor_for(machine_type), machine_type,
                             prices, scaleouts, **kw)
 
-    def contribute(self, rows: RuntimeData) -> ValidationReport:
-        """Workflow step (6): captured runtime data flows back, validated."""
-        return self.store.contribute(rows)
+    def contribute(self, rows: RuntimeData,
+                   contributor: Optional[str] = None) -> ValidationReport:
+        """Workflow step (6): captured runtime data flows back, validated.
+        ``contributor`` stamps the rows with the collaborator's identity
+        (see ``RuntimeDataStore.contribute``)."""
+        return self.store.contribute(rows, contributor=contributor)
 
 
 class Hub:
-    """The discovery index (paper Fig. 4, step 1)."""
+    """The discovery index (paper Fig. 4, step 1).
+
+    Note: ``Hub``/``JobRepo`` remain the in-process object layer, but the
+    canonical public surface is the versioned gateway API —
+    ``repro.api.HubGateway`` routes typed requests (predict / choose /
+    contribute / model-errors / search) across every published repo, adds
+    per-job micro-batch lanes and contributor provenance, and serves the
+    same results request-for-request (``tests/test_api_gateway.py`` parity
+    suite).  New front-ends should talk to the gateway, not to these
+    objects directly."""
 
     def __init__(self):
         self._repos: Dict[str, JobRepo] = {}
@@ -213,3 +225,9 @@ class Hub:
 
     def jobs(self) -> List[str]:
         return sorted(self._repos)
+
+    def gateway(self, prices: Dict[str, float], scaleouts: Sequence[int],
+                **kw):
+        """Convenience constructor for the canonical API surface."""
+        from repro.api.gateway import HubGateway
+        return HubGateway(self, prices, scaleouts, **kw)

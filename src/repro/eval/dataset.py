@@ -22,7 +22,27 @@ from repro.workloads import spark_emul
 from repro.workloads.spark_emul import derived_rng  # single seed mapping
 
 __all__ = ["MultiUserData", "build_multi_user", "contribution_chunks",
-           "derived_rng"]
+           "derived_rng", "user_contributor", "split_by_contributor"]
+
+
+def user_contributor(user: int) -> str:
+    """Canonical contributor id an emulated user's contributions carry."""
+    return f"user{int(user)}"
+
+
+def split_by_contributor(data: RuntimeData) -> Dict[str, RuntimeData]:
+    """Partition provenance-carrying rows back into per-contributor
+    datasets (row order preserved).  This is the leave-one-user-out
+    inverse over REAL provenance: a store grown through contributions
+    stamped with contributor ids — replay output, gateway traffic —
+    splits into exactly the per-user datasets that built it, no synthetic
+    user bookkeeping needed."""
+    out = {}
+    for code, name in enumerate(data.contributors):
+        rows = np.nonzero(data.ccodes == code)[0]
+        if len(rows):
+            out[name] = data.subset(rows)
+    return out
 
 
 @dataclass(frozen=True)

@@ -35,7 +35,8 @@ from repro.core.datastore import RuntimeDataStore
 from repro.core.hub import JobRepo
 from repro.core.predictor import DEFAULT_MODELS
 from repro.eval.dataset import (MultiUserData, build_multi_user,
-                                contribution_chunks, derived_rng)
+                                contribution_chunks, derived_rng,
+                                user_contributor)
 from repro.workloads.spark_emul import SCHEMAS
 
 TRAJECTORY_COLUMNS = ("job", "held_out", "step", "store_rows", "machine",
@@ -117,9 +118,16 @@ def replay_job(job: str, mu: MultiUserData, cfg: ReplayConfig
         for u in mu.users:
             if u == held:
                 continue
-            chunks.extend(contribution_chunks(
-                mu.per_user[u], cfg.chunks_per_user,
-                derived_rng("chunks", job, u, cfg.seed)))
+            # contributions carry REAL provenance: each chunk is stamped
+            # with its user's contributor id, so the replayed store can be
+            # split back into per-user datasets (eval.dataset.
+            # split_by_contributor) and the gateway reports true
+            # per-contributor stats over replay output
+            chunks.extend(
+                c.with_contributor(user_contributor(u))
+                for c in contribution_chunks(
+                    mu.per_user[u], cfg.chunks_per_user,
+                    derived_rng("chunks", job, u, cfg.seed)))
         order = derived_rng("order", job, held, cfg.seed) \
             .permutation(len(chunks))
         store = RuntimeDataStore(chunks[order[0]], seed=cfg.seed,
@@ -250,12 +258,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="comma-separated job subset")
     ap.add_argument("--chunks", type=int, default=1,
                     help="contributions each user splits their data into")
+    ap.add_argument("--track-models", default=None,
+                    help="comma-separated model names to track per "
+                         "checkpoint instead of the default pool (e.g. "
+                         "'linreg,gbm'; registered custom maintainer "
+                         "models are valid — the c3o row is always "
+                         "reported)")
     ap.add_argument("--out", default=None,
                     help="trajectory TSV path (default: "
                          "eval_out/replay_users<N>_seed<S>.tsv)")
     args = ap.parse_args(argv)
+    track_kw = ({} if args.track_models is None else
+                {"track_models": tuple(args.track_models.split(","))})
     cfg = ReplayConfig(jobs=tuple(args.jobs.split(",")), n_users=args.users,
-                       seed=args.seed, chunks_per_user=args.chunks)
+                       seed=args.seed, chunks_per_user=args.chunks,
+                       **track_kw)
     res = run_replay(cfg)
 
     out = args.out or os.path.join(

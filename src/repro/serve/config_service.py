@@ -1,28 +1,31 @@
-"""Async front-end for the configuration service: micro-batched serving.
+"""Asyncio micro-batch lanes for configuration serving.
 
-Concurrent ``choose`` calls land on an asyncio queue; a single worker task
-drains everything pending each tick and answers the whole batch with ONE
-``ConfigurationService.choose_cluster_batch`` dispatch (one engine call for
-the full machine x scale-out x context grid).  Per-request deadlines are
-packed into a [C] array with NaN for "no deadline", which the service
-resolves per context — heterogeneous requests still share a dispatch.
+``BatchLane`` is the generic building block: concurrent ``submit`` calls
+land on an asyncio queue; a single worker task drains everything pending
+each tick and answers the whole batch with ONE batched dispatch.
+Per-request deadlines are packed into a [C] array with NaN for "no
+deadline", which the dispatch resolves per context — heterogeneous
+requests still share a dispatch.  The gateway (``repro.api.gateway``)
+runs one lane per job, so concurrent requests for different jobs coalesce
+into one engine dispatch *per job per tick*.
 
-Usage:
+``AsyncConfigService`` is the legacy single-service front-end, now a thin
+shim over one ``BatchLane``:
 
     svc = ConfigurationService(...)
     async with AsyncConfigService(svc) as front:
         choice = await front.choose(ctx, t_max=400.0)
 
 Throughput is measured by the ``serve`` benchmark lane
-(``python -m benchmarks.run --only serve``), which reports requests/s and
-the realized mean micro-batch size.
+(``python -m benchmarks.run --only serve``) and the multi-job ``gateway``
+lane, which report requests/s and the realized mean micro-batch size.
 """
 from __future__ import annotations
 
 import asyncio
 import math
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -32,26 +35,51 @@ from repro.core.service import ConfigurationService
 
 @dataclass
 class ServeStats:
+    """Bounded serving counters: the mean batch size is exact as
+    requests-over-batches instead of an ever-growing per-batch list (a
+    lane on hub traffic would otherwise leak one list entry per tick,
+    forever).  ``requests`` counts DISPATCHED requests only — enqueue-
+    rejected submissions never reach a batch."""
     requests: int = 0
     batches: int = 0
-    batch_sizes: list = field(default_factory=list)
+
+    def record_batch(self, size: int) -> None:
+        self.requests += size
+        self.batches += 1
 
     @property
     def mean_batch(self) -> float:
-        return float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
+        return self.requests / self.batches if self.batches else 0.0
 
 
-class AsyncConfigService:
-    """Micro-batching wrapper around a ``ConfigurationService``.
+class BatchLane:
+    """Micro-batching worker over a batched dispatch function.
 
-    ``max_batch`` caps one dispatch's batch; ``tick_s`` is an optional
-    accumulation window after the first request of a batch arrives (0 means
-    "drain whatever is already queued", which keeps p50 latency at one
-    dispatch while still coalescing concurrent arrivals)."""
+    ``dispatch(contexts [C, k], t_max [C]) -> sequence of per-row results``
+    is called once per tick with everything queued.  ``max_batch`` caps one
+    dispatch's batch; ``tick_s`` is an optional accumulation window after
+    the first request of a batch arrives (0 means "drain whatever is
+    already queued", which keeps p50 latency at one dispatch while still
+    coalescing concurrent arrivals).
 
-    def __init__(self, service: ConfigurationService, *,
+    ``width`` pins the context-row width when the caller knows it (the
+    gateway pins from the job schema): submissions are then validated at
+    enqueue time, so a request whose width disagrees fails ALONE with
+    ``ValueError`` instead of poisoning the micro-batch it would have
+    been packed with (the batch pack allocates ``[C, width]``; one stray
+    row used to raise there and fan the failure out to every concurrent
+    caller — and kill the worker).  With ``width=None`` there is no
+    authoritative width, so each tick's batch is packed and dispatched
+    PER WIDTH GROUP: a stray-width request reaches the dispatch on its
+    own and collects its own outcome, never another group's — a
+    malformed first arrival cannot wedge the lane for every later
+    well-formed request.
+    """
+
+    def __init__(self, dispatch: Callable, *, width: Optional[int] = None,
                  max_batch: int = 256, tick_s: float = 0.0):
-        self.service = service
+        self.dispatch = dispatch
+        self.width = width
         self.max_batch = max_batch
         self.tick_s = tick_s
         self.stats = ServeStats()
@@ -59,13 +87,6 @@ class AsyncConfigService:
         self._worker: Optional[asyncio.Task] = None
 
     # ------------------------- lifecycle ----------------------------------
-    async def __aenter__(self) -> "AsyncConfigService":
-        self.start()
-        return self
-
-    async def __aexit__(self, *exc) -> None:
-        await self.stop()
-
     def start(self) -> None:
         if self._worker is None:
             self._worker = asyncio.get_running_loop().create_task(self._run())
@@ -78,7 +99,7 @@ class AsyncConfigService:
             except asyncio.CancelledError:
                 pass
             self._worker = None
-        # fail anything still enqueued so no choose() caller hangs forever
+        # fail anything still enqueued so no submit() caller hangs forever
         while True:
             try:
                 _, _, fut = self._queue.get_nowait()
@@ -88,13 +109,25 @@ class AsyncConfigService:
                 fut.cancel()
 
     # ------------------------- request path -------------------------------
-    async def choose(self, context_row: np.ndarray,
-                     t_max: Optional[float] = None) -> ClusterChoice:
-        """Awaitable single request; answered as part of the next batch."""
+    async def submit(self, context_row,
+                     t_max: Optional[float] = None):
+        """Awaitable single request; answered as part of the next batch.
+
+        ``context_row`` may be a flat tuple (gateway envelopes) or an
+        ndarray.  Content is validated HERE: every enqueued row is
+        float-convertible, so the worker's batch pack cannot raise on one
+        request's payload — a malformed request fails its own caller at
+        enqueue, never its batch."""
+        ctx = tuple(map(float, context_row)) if type(context_row) is tuple \
+            else np.asarray(context_row, np.float64).reshape(-1)
+        if self.width is not None and len(ctx) != self.width:
+            raise ValueError(
+                f"context row has width {len(ctx)}, lane expects "
+                f"{self.width}: request rejected at enqueue (malformed "
+                "requests must not poison the shared micro-batch)")
         fut = asyncio.get_running_loop().create_future()
-        await self._queue.put((np.asarray(context_row, np.float64),
-                               math.nan if t_max is None else float(t_max),
-                               fut))
+        await self._queue.put(
+            (ctx, math.nan if t_max is None else float(t_max), fut))
         return await fut
 
     # ------------------------- worker loop --------------------------------
@@ -110,32 +143,85 @@ class AsyncConfigService:
                         batch.append(self._queue.get_nowait())
                     except asyncio.QueueEmpty:
                         break
-                # pack the micro-batch columnar: one [C, k] context block +
-                # one [C] deadline vector, written into fresh arrays the
-                # service consumes without further copies
-                contexts = np.empty((len(batch), len(batch[0][0])),
-                                    np.float64)
-                t_max = np.empty(len(batch), np.float64)
-                for i, (ctx, tm, _) in enumerate(batch):
-                    contexts[i] = ctx
-                    t_max[i] = tm
-                try:
-                    choices = self.service.choose_cluster_batch(contexts,
-                                                                t_max)
-                except Exception as e:               # fan the failure out
-                    for _, _, fut in batch:
+                # pack per width group (normally exactly one group: pinned
+                # lanes enqueue-validate, unpinned lanes see one width in
+                # practice), each group columnar — one [C, k] context
+                # block + one [C] deadline vector the dispatch consumes
+                # without further copies.  A failing group fans its error
+                # to ITS requests only.
+                groups: dict = {}
+                for entry in batch:
+                    groups.setdefault(len(entry[0]), []).append(entry)
+                for group in groups.values():
+                    try:
+                        # the pack itself can raise (non-numeric content in
+                        # a width-correct tuple): that failure belongs to
+                        # this group's callers, not the worker — the lane
+                        # must survive any single bad payload
+                        contexts = np.empty((len(group), len(group[0][0])),
+                                            np.float64)
+                        t_max = np.empty(len(group), np.float64)
+                        for i, (ctx, tm, _) in enumerate(group):
+                            contexts[i] = ctx
+                            t_max[i] = tm
+                        results = self.dispatch(contexts, t_max)
+                    except Exception as e:           # fan the failure out
+                        for _, _, fut in group:
+                            if not fut.done():
+                                fut.set_exception(e)
+                        continue
+                    self.stats.record_batch(len(group))
+                    for (_, _, fut), result in zip(group, results):
                         if not fut.done():
-                            fut.set_exception(e)
-                    batch = []
-                    continue
-                self.stats.requests += len(batch)
-                self.stats.batches += 1
-                self.stats.batch_sizes.append(len(batch))
-                for (_, _, fut), choice in zip(batch, choices):
-                    if not fut.done():
-                        fut.set_result(choice)
+                            fut.set_result(result)
                 batch = []
         finally:
             for _, _, fut in batch:  # cancelled mid-batch: don't strand them
                 if not fut.done():
                     fut.cancel()
+
+
+class AsyncConfigService:
+    """Micro-batching wrapper around ONE ``ConfigurationService``.
+
+    Deprecated entry point: this is now a thin shim over ``BatchLane`` —
+    new code should route through ``repro.api.gateway.AsyncHubGateway``,
+    which runs one lane per published job behind the typed request
+    envelopes and serves identical choices (parity pinned in
+    ``tests/test_api_gateway.py``)."""
+
+    def __init__(self, service: ConfigurationService, *,
+                 max_batch: int = 256, tick_s: float = 0.0,
+                 width: Optional[int] = None):
+        self.service = service
+        # width: the expected context-row width, when the caller knows it
+        # (rejects malformed requests at enqueue; see BatchLane)
+        self._lane = BatchLane(service.choose_cluster_batch, width=width,
+                               max_batch=max_batch, tick_s=tick_s)
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._lane.stats
+
+    # ------------------------- lifecycle ----------------------------------
+    async def __aenter__(self) -> "AsyncConfigService":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def start(self) -> None:
+        self._lane.start()
+
+    async def stop(self) -> None:
+        await self._lane.stop()
+
+    # ------------------------- request path -------------------------------
+    async def choose(self, context_row: np.ndarray,
+                     t_max: Optional[float] = None) -> ClusterChoice:
+        """Awaitable single request; answered as part of the next batch."""
+        return await self._lane.submit(context_row, t_max)
+
+
+__all__: List[str] = ["ServeStats", "BatchLane", "AsyncConfigService"]

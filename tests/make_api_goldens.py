@@ -1,0 +1,30 @@
+"""Regenerate the golden API v1 wire-format samples.  Run DELIBERATELY —
+a diff in these goldens is a claim that the public wire format changed on
+purpose (a versioned-API break):
+
+    PYTHONPATH=src python tests/make_api_goldens.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from test_api_codec import GOLDEN_PATH, golden_samples  # noqa: E402
+
+from repro.api import codec  # noqa: E402
+
+
+def main() -> None:
+    golden = {name: codec.encode(obj)
+              for name, obj in golden_samples().items()}
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH} ({len(golden)} samples)")
+
+
+if __name__ == "__main__":
+    main()

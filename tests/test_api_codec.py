@@ -1,0 +1,161 @@
+"""API v1 codec contracts: deterministic, byte-stable JSON round trips for
+every envelope type — property-based over arbitrary payloads (NaN/inf
+deadlines, unicode job names, error envelopes) plus golden-pinned sample
+encodings (a diff in the goldens is a wire-format break)."""
+import json
+import math
+import os
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # deterministic example sweeps
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.api import codec
+from repro.api.types import (ChooseRequest, ChooseResult, ContributeRequest,
+                             ContributeResult, JobInfo, ModelErrorsRequest,
+                             ModelErrorsResult, PredictRequest, PredictResult,
+                             Response, SearchRequest, SearchResult)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "api_v1.json")
+
+#: job-name pool: plain ASCII, unicode, TSV-hostile characters
+_JOBS = ("grep", "sørt-üser", "ページランク", "k\tmeans?", "job with spaces",
+         '"quoted"')
+_CONTRIBUTORS = ("unknown", "alice", "üser-42", "did:user:0x9f")
+_SPECIALS = (math.nan, math.inf, -math.inf, 0.0, -0.0, 1e-300, 1e300)
+
+
+def golden_samples():
+    """The pinned wire-format corpus: one representative of every message
+    type (regenerate DELIBERATELY with
+    ``PYTHONPATH=src python tests/make_api_goldens.py``)."""
+    return {
+        "predict_request": PredictRequest(
+            "grep", "m5.xlarge", ((4.0, 15.0, 0.02), (8.0, 15.0, 0.08))),
+        "choose_request_nan_deadline": ChooseRequest(
+            "sørt-üser", (12.5, 0.02), t_max=math.nan),
+        "contribute_request": ContributeRequest(
+            "grep", ("m5.xlarge", "c5.xlarge"),
+            ((4.0, 15.0, 0.02), (8.0, 15.0, 0.08)), (120.5, 64.25),
+            contributor_id="alice"),
+        "model_errors_request": ModelErrorsRequest(
+            "grep", "m5.xlarge", ((4.0, 15.0, 0.02),), (120.5,),
+            track_models=("linreg", "gbm")),
+        "search_request": SearchRequest("pagerank"),
+        "choose_response": Response.success(ChooseResult(
+            "c5.xlarge", 4, 174.8, 196.1, 0.0165, False)),
+        "contribute_response": Response.success(ContributeResult(
+            True, 0.031, 0.029, "accepted", "alice", 166, 1, "ab12" * 16)),
+        "predict_response_inf_sigma": Response.success(PredictResult(
+            (100.2, math.inf), "ogb", -3.8, math.nan)),
+        "model_errors_response": Response.success(ModelErrorsResult(
+            (("c3o", 0.003, 0.44), ("linreg", 0.31, 42.0)), "gbm")),
+        "search_response": Response.success(SearchResult((JobInfo(
+            "grep", "grep", 162, ("m5.xlarge",), ("ernest", "gbm"),
+            (("alice", 4), ("unknown", 162))),))),
+        "error_envelope": Response.failure(
+            "unknown_job", "no published repo for job 'nope'"),
+    }
+
+
+# --------------------------------------------------------------------------
+# golden-pinned wire format
+# --------------------------------------------------------------------------
+
+def test_golden_sample_encodings():
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    samples = golden_samples()
+    assert set(golden) == set(samples)
+    for name, obj in samples.items():
+        assert codec.encode(obj) == golden[name], \
+            f"wire format drifted for {name}"
+        back = codec.decode(golden[name])
+        assert codec.encode(back) == golden[name]
+
+
+def test_encoding_is_strict_json():
+    """Every encoding parses under strict JSON rules (no NaN literals) —
+    what makes the format consumable by non-Python HTTP peers."""
+    for name, obj in golden_samples().items():
+        parsed = json.loads(codec.encode(obj), parse_constant=lambda s: (
+            _ for _ in ()).throw(AssertionError(f"{name}: non-strict {s}")))
+        assert isinstance(parsed, dict)
+
+
+# --------------------------------------------------------------------------
+# property-based round trips
+# --------------------------------------------------------------------------
+
+def _eq(a, b):
+    """Structural equality with NaN == NaN (dataclass __eq__ breaks on
+    NaN fields, which are legal deadline/metric values)."""
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    if type(a) is not type(b):
+        return False
+    if isinstance(a, tuple):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    if hasattr(a, "__dataclass_fields__"):
+        return all(_eq(getattr(a, f), getattr(b, f))
+                   for f in a.__dataclass_fields__)
+    return a == b
+
+
+def _assert_roundtrip(msg):
+    text = codec.encode(msg)
+    back = codec.decode(text)
+    assert _eq(back, msg), (msg, back)
+    assert codec.encode(back) == text            # byte-stable
+
+
+@settings(max_examples=40, deadline=None)
+@given(job=st.sampled_from(_JOBS), c0=st.floats(-1e6, 1e6),
+       special=st.sampled_from(_SPECIALS), use_special=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_choose_request_roundtrip(job, c0, special, use_special, seed):
+    t_max = special if use_special else abs(c0) + 1.0
+    _assert_roundtrip(ChooseRequest(job, (c0, special), t_max=t_max,
+                                    seed=seed))
+
+
+@settings(max_examples=30, deadline=None)
+@given(job=st.sampled_from(_JOBS), contributor=st.sampled_from(_CONTRIBUTORS),
+       n=st.integers(1, 5), v=st.floats(0.001, 1e9))
+def test_contribute_request_roundtrip(job, contributor, n, v):
+    _assert_roundtrip(ContributeRequest(
+        job, ("m5.xlarge",) * n, tuple((float(i), v) for i in range(n)),
+        tuple(v + i for i in range(n)), contributor_id=contributor))
+
+
+@settings(max_examples=30, deadline=None)
+@given(mape=st.sampled_from(_SPECIALS), rows=st.integers(0, 10**9),
+       accepted=st.booleans(), job=st.sampled_from(_JOBS))
+def test_result_envelope_roundtrip(mape, rows, accepted, job):
+    _assert_roundtrip(Response.success(ContributeResult(
+        accepted, mape, mape, f"verdict for {job}", "üser", rows, 3, "ff00")))
+    _assert_roundtrip(Response.success(SearchResult((JobInfo(
+        job, job, rows, ("m5.xlarge", "c5.xlarge"), ("gbm",),
+        (("unknown", rows),)),))))
+
+
+@settings(max_examples=30, deadline=None)
+@given(code=st.sampled_from(("unknown_job", "bad_request", "internal")),
+       detail=st.sampled_from(_JOBS))
+def test_error_envelope_roundtrip(code, detail):
+    msg = Response.failure(code, f"failed: {detail}")
+    _assert_roundtrip(msg)
+    back = codec.decode(codec.encode(msg))
+    assert not back.ok and back.result is None
+    assert back.error_code == code
+
+
+def test_unencodable_value_raises():
+    try:
+        codec.encode(object())
+    except TypeError:
+        pass
+    else:                                 # pragma: no cover
+        raise AssertionError("expected TypeError for non-API payloads")

@@ -1,0 +1,457 @@
+"""Hub Gateway API v1 contracts: request-for-request parity with the
+legacy direct object path (choices, validation reports, model-error
+tables), error envelopes, contributor provenance threading, per-job batch
+lanes, and backward compatibility for pre-provenance TSV stores."""
+import asyncio
+import hashlib
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import (AsyncHubGateway, ChooseRequest, ContributeRequest,
+                       HubGateway, ModelErrorsRequest, PredictRequest,
+                       SearchRequest)
+from repro.core.datastore import RuntimeDataStore
+from repro.core.hub import Hub, JobRepo
+from repro.core.service import ConfigurationService
+from repro.eval.dataset import split_by_contributor
+from repro.workloads import spark_emul as W
+
+SCALEOUTS = (2, 3, 4, 6, 8, 12, 16)
+PRICES = {m.name: m.price for m in W.MACHINES.values()}
+JOBS = ("grep", "sort")
+
+
+def _hub(seed=0):
+    hub = Hub()
+    for job in JOBS:
+        d = W.generate_job_data(job, seed=seed)
+        hub.publish(JobRepo(job, job, d.schema, RuntimeDataStore(d, seed=0)))
+    return hub
+
+
+@pytest.fixture()
+def hub():
+    return _hub()
+
+
+@pytest.fixture()
+def gateway(hub):
+    return HubGateway(hub, PRICES, SCALEOUTS)
+
+
+def _contexts(job, n, seed=3):
+    rng = np.random.default_rng(seed)
+    if job == "grep":
+        return [(float(rng.uniform(10, 20)),
+                 float(rng.choice([.002, .02, .08]))) for _ in range(n)]
+    return [(float(rng.uniform(10, 30)),) for _ in range(n)]
+
+
+# --------------------------------------------------------------------------
+# parity with the legacy direct path
+# --------------------------------------------------------------------------
+
+def test_choose_parity_with_direct_service(hub, gateway):
+    for job in JOBS:
+        svc = ConfigurationService.from_repo(hub.get(job), None, PRICES,
+                                             SCALEOUTS)
+        ctxs = _contexts(job, 6)
+        t_maxes = [math.nan, 300.0, 450.0, math.nan, 600.0, 250.0]
+        want = svc.choose_cluster_batch(np.asarray(ctxs),
+                                        np.asarray(t_maxes))
+        for ctx, tm, w in zip(ctxs, t_maxes, want):
+            resp = gateway.choose(ChooseRequest(job, ctx, t_max=tm))
+            assert resp.ok
+            assert resp.result.to_choice() == w
+
+
+def test_predict_parity_with_predictor_for(hub, gateway):
+    repo = hub.get("grep")
+    pred = repo.predictor_for("m5.xlarge")
+    rows = ((4.0, 15.0, 0.02), (8.0, 12.0, 0.08), (16.0, 19.0, 0.002))
+    resp = gateway.predict(PredictRequest("grep", "m5.xlarge", rows))
+    assert resp.ok
+    np.testing.assert_allclose(resp.result.runtimes_s,
+                               pred.predict(np.asarray(rows)))
+    assert resp.result.selected_model == pred.selected
+    np.testing.assert_allclose((resp.result.mu, resp.result.sigma),
+                               (pred.mu, pred.sigma))
+
+
+def test_contribute_parity_and_provenance(gateway):
+    """The gateway's report matches a byte-identical store driven through
+    the legacy direct path, and the contributor id lands on the rows."""
+    shadow = _hub()                        # independent identical store
+    base = W.generate_job_data("grep")
+    sub = base.subset(np.arange(6))
+    req = ContributeRequest("grep", tuple(sub.machine_type),
+                            tuple(map(tuple, sub.X)), tuple(sub.y),
+                            contributor_id="alice")
+    resp = gateway.contribute(req)
+    direct = shadow.get("grep").store.contribute(sub, contributor="alice")
+    assert resp.ok
+    got = resp.result
+    assert got.accepted == direct.accepted
+    np.testing.assert_allclose(got.baseline_mape, direct.baseline_mape)
+    np.testing.assert_allclose(got.candidate_mape, direct.candidate_mape)
+    assert got.reason == direct.reason
+    assert got.fingerprint == shadow.get("grep").store.fingerprint
+    assert got.store_version == 1
+    stats = gateway.contributor_stats("grep")
+    assert stats.ok and ("alice", 6) in stats.result
+
+
+def test_model_errors_parity(hub, gateway):
+    repo = hub.get("grep")
+    test = W.generate_job_data("grep", seed=9)
+    sub = test.machine_view("m5.xlarge").subset(np.arange(8))
+    resp = gateway.model_errors(ModelErrorsRequest(
+        "grep", "m5.xlarge", tuple(map(tuple, sub.X)), tuple(sub.y),
+        track_models=("linreg", "gbm")))
+    errs, selected = repo.model_errors("m5.xlarge", sub,
+                                       track_models=("linreg", "gbm"))
+    assert resp.ok
+    assert resp.result.selected_model == selected
+    assert dict((m, (mape, mae)) for m, mape, mae in resp.result.errors) \
+        == {m: (float(a), float(b)) for m, (a, b) in errs.items()}
+
+
+def test_search_lists_repo_metadata(gateway):
+    resp = gateway.search(SearchRequest(""))
+    assert resp.ok
+    assert tuple(j.job for j in resp.result.jobs) == ("grep", "sort")
+    grep = resp.result.jobs[0]
+    assert grep.rows == 162 and set(grep.machines) == set(W.MACHINES)
+    assert grep.contributors == (("unknown", 162),)
+    hit = gateway.search(SearchRequest("sort"))
+    assert [j.job for j in hit.result.jobs] == ["sort"]
+
+
+# --------------------------------------------------------------------------
+# error envelopes (never exceptions)
+# --------------------------------------------------------------------------
+
+def test_unknown_job_is_an_error_envelope(gateway):
+    for resp in (gateway.choose(ChooseRequest("nope", (1.0, 2.0))),
+                 gateway.predict(PredictRequest("nope", "m5.xlarge",
+                                                ((2.0, 1.0, 0.1),))),
+                 gateway.contributor_stats("nope")):
+        assert not resp.ok and resp.result is None
+        assert resp.error_code == "unknown_job"
+        assert "nope" in resp.detail
+
+
+def test_malformed_requests_are_bad_request(gateway):
+    bad = [
+        ChooseRequest("grep", (1.0,)),                 # wrong context width
+        PredictRequest("grep", "m5.xlarge", ((1.0, 2.0),)),  # wrong row dim
+        PredictRequest("grep", "z9.xlarge",            # unknown machine
+                       ((2.0, 15.0, 0.02),)),
+        ContributeRequest("grep", ("m5.xlarge",),      # row count mismatch
+                          ((2.0, 15.0, 0.02),), (1.0, 2.0)),
+        "not a request",                               # not an envelope
+    ]
+    for req in bad:
+        resp = gateway.handle(req)
+        assert not resp.ok and resp.error_code == "bad_request", req
+
+
+# --------------------------------------------------------------------------
+# store-version tracking
+# --------------------------------------------------------------------------
+
+def test_accepted_contribution_refreshes_served_choices(gateway):
+    """The per-job service cache is store-version keyed: an accepted
+    contribution rebuilds it, so post-contribution choices come from the
+    updated predictors (parity with a service built fresh)."""
+    ctx = _contexts("grep", 1)[0]
+    assert gateway.choose(ChooseRequest("grep", ctx)).ok
+    base = W.generate_job_data("grep")
+    rng = np.random.default_rng(1)
+    idx = rng.choice(len(base), 40, replace=False)
+    sub = base.subset(np.sort(idx))
+    sub.y = sub.y * 1.04                    # benign drift, accepted
+    resp = gateway.contribute(ContributeRequest(
+        "grep", tuple(sub.machine_type), tuple(map(tuple, sub.X)),
+        tuple(sub.y), contributor_id="bob"))
+    assert resp.ok and resp.result.accepted
+    fresh = ConfigurationService.from_repo(gateway.hub.get("grep"), None,
+                                           PRICES, SCALEOUTS)
+    want = fresh.choose_cluster_batch(np.asarray([ctx]),
+                                      np.asarray([math.nan]))[0]
+    got = gateway.choose(ChooseRequest("grep", ctx))
+    assert got.ok and got.result.to_choice() == want
+
+
+def test_custom_model_registration_invalidates_served_choices(gateway):
+    """The service cache keys on the model-spec OBJECTS (the same
+    contract as JobRepo.predictor_for): a maintainer registering a custom
+    model after the gateway has served must change subsequent choices'
+    predictor pool, not serve from the stale pool forever."""
+    from repro.core.models.api import ModelSpec, get_model
+    ctx = _contexts("grep", 1)[0]
+    assert gateway.choose(ChooseRequest("grep", ctx)).ok   # cache warm
+    repo = gateway.hub.get("grep")
+    lin = get_model("linreg")
+    repo.add_custom_model(ModelSpec("gw_custom", lin.make_aux, lin.fit,
+                                    lin.predict))
+    fresh = ConfigurationService.from_repo(repo, None, PRICES, SCALEOUTS)
+    want = fresh.choose_cluster_batch(np.asarray([ctx]),
+                                      np.asarray([math.nan]))[0]
+    got = gateway.choose(ChooseRequest("grep", ctx))
+    assert got.ok and got.result.to_choice() == want
+    # search metadata refreshes too (model list is part of the key)
+    hit = gateway.search(SearchRequest("grep")).result.jobs[0]
+    assert "gw_custom" in hit.models
+
+
+# --------------------------------------------------------------------------
+# per-job micro-batch lanes
+# --------------------------------------------------------------------------
+
+def test_async_lanes_coalesce_per_job_and_match_sync(gateway):
+    n = 24
+    reqs = ([ChooseRequest("grep", c, t_max=400.0)
+             for c in _contexts("grep", n)]
+            + [ChooseRequest("sort", c) for c in _contexts("sort", n)])
+
+    async def drive():
+        async with AsyncHubGateway(gateway, max_batch=64) as agw:
+            got = await asyncio.gather(*[agw.choose(q) for q in reqs])
+            return got, {j: (s.requests, s.batches)
+                         for j, s in agw.lane_stats.items()}
+
+    got, stats = asyncio.run(drive())
+    assert all(r.ok for r in got)
+    assert set(stats) == {"grep", "sort"}
+    for job in JOBS:
+        requests, batches = stats[job]
+        assert requests == n
+        assert batches < n                 # concurrent arrivals coalesced
+    for req, resp in zip(reqs, got):
+        assert resp.result.to_choice() == \
+            gateway.choose(req).result.to_choice()
+
+
+def test_async_lane_rejects_bad_width_without_poisoning_batch(gateway):
+    """Regression (micro-batch poisoning): one wrong-width request used to
+    blow up the whole batch pack and fan the exception out to every
+    concurrent caller.  It must now fail alone, as a bad_request envelope,
+    while the good requests in the same tick are answered."""
+    good = [ChooseRequest("grep", c, t_max=400.0)
+            for c in _contexts("grep", 8)]
+    bad = ChooseRequest("grep", (15.0,))          # width 1, schema wants 2
+
+    async def drive():
+        async with AsyncHubGateway(gateway, max_batch=64) as agw:
+            return await asyncio.gather(
+                *([agw.choose(q) for q in good[:4]]
+                  + [agw.choose(bad)]
+                  + [agw.choose(q) for q in good[4:]]))
+
+    results = asyncio.run(drive())
+    assert sum(r.ok for r in results) == len(good)
+    (bad_resp,) = [r for r in results if not r.ok]
+    assert bad_resp.error_code == "bad_request"
+    for req, resp in zip(good, [r for r in results if r.ok]):
+        assert resp.result.to_choice() == \
+            gateway.choose(req).result.to_choice()
+
+
+def test_async_lane_survives_non_numeric_content(gateway):
+    """Regression: a width-correct context with non-numeric content used
+    to blow up the worker's batch pack OUTSIDE the dispatch guard —
+    cancelling every concurrent request, killing the worker, and hanging
+    all later submits.  Content is now validated at enqueue: the bad
+    request alone gets bad_request, its tick's good requests are served,
+    and the lane keeps serving."""
+    good = [ChooseRequest("grep", c, t_max=400.0)
+            for c in _contexts("grep", 6)]
+    bad = ChooseRequest("grep", (15.0, "oops"))    # width ok, content not
+
+    async def drive():
+        async with AsyncHubGateway(gateway, max_batch=64) as agw:
+            results = await asyncio.gather(
+                *([agw.choose(q) for q in good[:3]]
+                  + [agw.choose(bad)]
+                  + [agw.choose(q) for q in good[3:]]))
+            late = await asyncio.wait_for(agw.choose(good[0]), timeout=30)
+            return results, late
+
+    results, late = asyncio.run(drive())
+    (bad_resp,) = [r for r in results if not r.ok]
+    assert bad_resp.error_code == "bad_request"
+    assert sum(r.ok for r in results) == len(good)
+    assert late.ok
+
+
+def test_choose_seed_is_threaded_to_the_service(hub, gateway):
+    """ChooseRequest.seed must select the same predictor state a direct
+    ConfigurationService built with that seed uses (parity with how
+    PredictRequest/ModelErrorsRequest thread their seeds)."""
+    ctx = _contexts("grep", 1)[0]
+    svc7 = ConfigurationService.from_repo(hub.get("grep"), None, PRICES,
+                                          SCALEOUTS, seed=7)
+    want = svc7.choose_cluster_batch(np.asarray([ctx]),
+                                     np.asarray([math.nan]))[0]
+    got = gateway.choose(ChooseRequest("grep", ctx, seed=7))
+    assert got.ok and got.result.to_choice() == want
+
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            resp = await agw.choose(ChooseRequest("grep", ctx, seed=7))
+            return resp, set(agw.lane_stats)
+
+    resp, lanes = asyncio.run(drive())
+    assert resp.ok and resp.result.to_choice() == want
+    assert lanes == {"grep#seed=7"}        # non-default seed: its own lane
+
+
+def test_async_gateway_serves_again_after_stop(gateway):
+    """Regression: stop() used to retain stopped lanes, so a choose()
+    after re-entering the gateway enqueued onto a dead worker and hung
+    forever.  Lanes are dropped on stop and recreated on demand."""
+    agw = AsyncHubGateway(gateway, max_batch=16)
+    req = ChooseRequest("grep", _contexts("grep", 1)[0], t_max=400.0)
+
+    async def drive():
+        async with agw:
+            first = await asyncio.wait_for(agw.choose(req), timeout=30)
+        async with agw:                    # re-entered after stop()
+            second = await asyncio.wait_for(agw.choose(req), timeout=30)
+        return first, second
+
+    first, second = asyncio.run(drive())
+    assert first.ok and second.ok
+    assert first.result == second.result
+
+
+def test_contribute_rejects_tsv_delimiter_injection(gateway):
+    """Contributor ids and machine names are TSV column values: anything
+    the codec cannot round-trip -- tab, ANY line-breaking character
+    (splitlines splits on \\v/\\x85/U+2028 too), or edge whitespace
+    (silently stripped on reload, changing the value and therefore the
+    fingerprint) -- would shear or mutate the persisted store, so
+    ingestion refuses it as bad_request (store untouched)."""
+    base = W.generate_job_data("grep")
+    sub = base.subset(np.arange(4))
+    ok_rows = (tuple(sub.machine_type), tuple(map(tuple, sub.X)),
+               tuple(sub.y))
+    for cid in ("a\tb", "a\nb", "a\x0bb", "a\x85b", "a\u2028b",
+                "bob ", " bob", ""):
+        resp = gateway.contribute(ContributeRequest(
+            "grep", *ok_rows, contributor_id=cid))
+        assert not resp.ok and resp.error_code == "bad_request", repr(cid)
+    for machine in ("m5\txlarge", "m5\x0bxlarge", "m5 "):
+        resp = gateway.contribute(ContributeRequest(
+            "grep", (machine,) * 4, *ok_rows[1:], contributor_id="alice"))
+        assert not resp.ok and resp.error_code == "bad_request", \
+            repr(machine)
+    assert gateway.hub.get("grep").store.version == 0
+    # the legacy direct path funnels through the same chokepoint
+    from repro.core.features import RuntimeData
+    repo = gateway.hub.get("grep")
+    bad = RuntimeData(repo.schema, np.asarray(["m5\tlarge"] * 4),
+                      sub.X, sub.y)
+    with pytest.raises(ValueError, match="TSV"):
+        repo.contribute(bad)
+    with pytest.raises(ValueError, match="TSV"):
+        repo.contribute(sub, contributor="eve\u2029")
+    # per-row provenance smuggled through from_columns (which skips the
+    # constructors' validation) is caught at the chokepoint too
+    smuggled = RuntimeData.from_columns(
+        repo.schema, sub.machines, sub.codes, sub.scale_out, sub.context,
+        sub.runtime, contributors=("evil\tname",),
+        ccodes=np.zeros(len(sub), np.int32))
+    with pytest.raises(ValueError, match="TSV"):
+        repo.contribute(smuggled)
+    assert repo.store.version == 0
+
+
+def test_lane_cap_evicts_seed_sprayed_lanes(gateway, monkeypatch):
+    """The request seed is client-supplied: without a cap, seed-spraying
+    traffic would leak one lane (live worker task + service) per distinct
+    seed.  The LRU cap bounds live lanes; steady traffic never hits it."""
+    monkeypatch.setattr(AsyncHubGateway, "MAX_LANES", 2)
+    ctx = _contexts("grep", 1)[0]
+
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            for s in (1, 2, 3):
+                r = await agw.choose(ChooseRequest("grep", ctx, seed=s))
+                assert r.ok
+            return set(agw.lane_stats)
+
+    lanes = asyncio.run(drive())
+    assert len(lanes) == 2
+    assert "grep#seed=3" in lanes          # newest survives
+
+
+def test_async_unknown_job_does_not_create_a_lane(gateway):
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            resp = await agw.choose(ChooseRequest("nope", (1.0, 2.0)))
+            return resp, dict(agw.lane_stats)
+
+    resp, lanes = asyncio.run(drive())
+    assert not resp.ok and resp.error_code == "unknown_job"
+    assert lanes == {}
+
+
+# --------------------------------------------------------------------------
+# provenance backward compatibility
+# --------------------------------------------------------------------------
+
+def test_legacy_tsv_store_loads_with_preserved_fingerprint(tmp_path):
+    """A pre-provenance TSV file (no contributor column) loads unchanged:
+    same rows, same canonical encoding, same fingerprint — and only a
+    KNOWN contributor transitions the encoding."""
+    data = W.generate_job_data("grep")
+    legacy_tsv = data.to_tsv()
+    assert "contributor" not in legacy_tsv.splitlines()[0]
+    path = tmp_path / "grep.tsv"
+    path.write_text(legacy_tsv)
+    store = RuntimeDataStore.load(str(path), data.schema)
+    assert store.data.to_tsv() == legacy_tsv
+    assert store.fingerprint == \
+        hashlib.sha256(legacy_tsv.encode()).hexdigest()
+    # legacy-format contributions leave the encoding legacy
+    sub = data.subset(np.arange(5))
+    assert store.contribute(sub).accepted
+    assert not store.data.has_provenance
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+    # a known contributor transitions to the provenance encoding; the
+    # chain re-seeds and keeps matching a full rehash from then on
+    assert store.contribute(sub, contributor="alice").accepted
+    assert store.data.has_provenance
+    assert "contributor" in store.data.to_tsv().splitlines()[0]
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+    # provenance TSV round-trips through save/load
+    store.save(str(path))
+    again = RuntimeDataStore.load(str(path), data.schema)
+    assert again.fingerprint == store.fingerprint
+    assert again.data.contributor_counts() == \
+        store.data.contributor_counts()
+
+
+def test_split_by_contributor_inverts_contributions():
+    data = W.generate_job_data("grep")
+    store = RuntimeDataStore(data, seed=0)
+    users = {}
+    rng = np.random.default_rng(2)
+    for name in ("alice", "bob"):
+        idx = np.sort(rng.choice(len(data), 12, replace=False))
+        users[name] = data.subset(idx)
+        assert store.contribute(users[name], contributor=name).accepted
+    parts = split_by_contributor(store.data)
+    assert set(parts) == {"unknown", "alice", "bob"}
+    assert len(parts["unknown"]) == len(data)
+    for name, want in users.items():
+        got = parts[name]
+        np.testing.assert_array_equal(got.y, want.y)
+        np.testing.assert_array_equal(got.X, want.X)
+        assert (got.contributor == name).all()

@@ -123,6 +123,65 @@ def test_replay_deterministic_across_runs():
 
 
 # --------------------------------------------------------------------------
+# CLI: custom tracked models + provenance
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cli_track_models_adds_custom_model_rows(tmp_path, capsys):
+    """`--track-models` replays over a caller-chosen model set — including
+    registered custom maintainer models outside the default pool — and
+    their rows land in the trajectory TSV."""
+    from repro.core.models.api import ModelSpec, get_model, register_model
+    lin = get_model("linreg")
+    register_model(ModelSpec("cli_custom", lin.make_aux, lin.fit,
+                             lin.predict))
+    out = tmp_path / "traj.tsv"
+    rc = R.main(["--users", "2", "--jobs", "grep",
+                 "--track-models", "linreg,cli_custom",
+                 "--out", str(out)])
+    assert rc in (0, 1)                    # summary verdict, not a crash
+    capsys.readouterr()
+    lines = out.read_text().strip().split("\n")
+    assert lines[0].split("\t") == list(R.TRAJECTORY_COLUMNS)
+    models = {ln.split("\t")[5] for ln in lines[1:]}
+    # exactly the tracked set plus the always-present c3o row; the default
+    # pool's extra models (ernest/bom/ogb) are NOT tracked in this run
+    assert models == {"linreg", "cli_custom", "c3o"}
+
+
+@pytest.mark.slow
+def test_replay_store_carries_real_user_provenance():
+    """Replayed contributions are stamped with their emulated user's id:
+    splitting the final store by contributor recovers exactly the
+    non-held-out users' datasets (leave-one-user-out over REAL provenance
+    instead of synthetic bookkeeping)."""
+    from repro.core.datastore import RuntimeDataStore
+    from repro.eval.dataset import (build_multi_user, contribution_chunks,
+                                    split_by_contributor, user_contributor)
+    job, held, seed = "grep", 0, 0
+    mu = build_multi_user(job, 3, seed)
+    store = None
+    for u in mu.users:
+        if u == held:
+            continue
+        for c in contribution_chunks(mu.per_user[u], 2,
+                                     derived_rng("chunks", job, u, seed)):
+            stamped = c.with_contributor(user_contributor(u))
+            if store is None:
+                store = RuntimeDataStore(stamped, seed=seed)
+            else:
+                assert store.contribute(stamped).accepted
+    parts = split_by_contributor(store.data)
+    assert set(parts) == {user_contributor(u) for u in mu.users if u != held}
+    for u in mu.users:
+        if u == held:
+            continue
+        got = parts[user_contributor(u)]
+        want = mu.per_user[u]
+        assert sorted(got.y.tolist()) == sorted(want.y.tolist())
+
+
+# --------------------------------------------------------------------------
 # summary logic (no engine involved)
 # --------------------------------------------------------------------------
 

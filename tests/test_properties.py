@@ -78,6 +78,54 @@ def test_fingerprint_chain_property(n, k, seed, n_chunks):
     assert store.data.to_tsv() == d.to_tsv()
 
 
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 60), k=st.integers(0, 3), seed=st.integers(0, 10**6),
+       all_unknown=st.booleans())
+def test_tsv_roundtrip_with_provenance_property(n, k, seed, all_unknown):
+    """Per-row contributor provenance round-trips through the TSV codec;
+    data whose every contributor is "unknown" canonically encodes in the
+    LEGACY column set (what keeps pre-provenance files byte-stable)."""
+    rng = np.random.default_rng(seed)
+    d = _random_data(rng, n, k, 1.0)
+    pool = (["unknown"] if all_unknown else
+            ["unknown", "alice", "üser-" + "".join(
+                rng.choice(list(_NAME_CHARS), size=4))])
+    names = np.asarray(pool, object)[rng.integers(0, len(pool), n)]
+    d = RuntimeData(d.schema, d.machine_type, d.X, d.y,
+                    contributor=names.astype(str))
+    text = d.to_tsv()
+    has_known = bool((names != "unknown").any())
+    assert d.has_provenance == has_known
+    assert ("contributor" in text.splitlines()[0]) == has_known
+    back = RuntimeData.from_tsv(text, d.schema)
+    assert (back.contributor == d.contributor).all()
+    assert back.to_tsv() == text
+    assert back.contributor_counts() == d.contributor_counts()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 80), k=st.integers(0, 3), seed=st.integers(0, 10**6),
+       n_chunks=st.integers(1, 5), transition=st.integers(0, 5))
+def test_fingerprint_chain_with_provenance_property(n, k, seed, n_chunks,
+                                                    transition):
+    """The streaming fingerprint equals a full rehash at EVERY step even
+    across the legacy -> provenance encoding transition (contributions
+    from chunk index ``transition`` onward carry contributor ids)."""
+    rng = np.random.default_rng(seed)
+    d = _random_data(rng, n, k, 1.0)
+    cuts = np.sort(rng.integers(1, n, size=min(n_chunks, n - 1)))
+    bounds = [0, *dict.fromkeys(cuts.tolist()), n]
+    chunks = [d.subset(np.arange(lo, hi))
+              for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+    store = RuntimeDataStore(chunks[0], reject_ratio=1e30, reject_slack=1e30)
+    for i, c in enumerate(chunks[1:], start=1):
+        contributor = f"u{i}" if i >= transition else None
+        assert store.contribute(c, contributor=contributor).accepted
+        assert store.fingerprint == hashlib.sha256(
+            store.data.to_tsv().encode()).hexdigest()
+    assert sum(store.data.contributor_counts().values()) == n
+
+
 @settings(max_examples=30, deadline=None)
 @given(seed=st.integers(0, 10**6), cap=st.integers(1, 200),
        n_groups=st.integers(1, 6))

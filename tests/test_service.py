@@ -243,6 +243,85 @@ def test_async_frontend_matches_sync_and_coalesces():
     assert stats.mean_batch > 1.0
 
 
+def test_async_frontend_rejects_mismatched_width_without_poisoning_batch():
+    """Regression: a request whose context width differed from the batch
+    head's poisoned the WHOLE micro-batch — the [C, k] pack raised and the
+    exception fanned out to every concurrent caller (and killed the
+    worker).  With a pinned width the bad request is rejected alone at
+    choose() enqueue time; concurrent good requests are answered."""
+    preds, prices = _dominated_setup()
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+    contexts = np.random.default_rng(0).uniform(10, 20, (8, 1))
+
+    async def drive():
+        async with AsyncConfigService(svc, max_batch=64, width=1) as front:
+            results = await asyncio.gather(
+                *([front.choose(contexts[i]) for i in range(4)]
+                  + [front.choose(np.asarray([15.0, 2.0]))]  # stray width
+                  + [front.choose(contexts[i]) for i in range(4, 8)]),
+                return_exceptions=True)
+            # the lane survives: a fresh request still gets served
+            late = await front.choose(contexts[0], t_max=400.0)
+            return results, late
+
+    results, late = asyncio.run(drive())
+    bad = [r for r in results if isinstance(r, Exception)]
+    assert len(bad) == 1 and isinstance(bad[0], ValueError)
+    assert "width" in str(bad[0])
+    good = [r for r in results if not isinstance(r, Exception)]
+    assert len(good) == 8
+    want = svc.choose_cluster_batch(contexts)
+    for a, b in zip(good, want):
+        _assert_same_choice(a, b)
+    assert late.machine_type == "A"
+
+
+def test_async_frontend_unpinned_widths_dispatch_per_group():
+    """Without a pinned width there is no authoritative row shape, so a
+    mixed-width tick is packed per width group: every request reaches the
+    service with a consistently shaped batch, a malformed FIRST request
+    cannot wedge the lane against later well-formed traffic, and
+    same-width requests still share one dispatch."""
+    preds, prices = _dominated_setup()
+    svc = ConfigurationService(preds, prices, SCALEOUTS)
+    contexts = np.random.default_rng(1).uniform(10, 20, (6, 1))
+
+    async def drive():
+        async with AsyncConfigService(svc, max_batch=64) as front:
+            # malformed FIRST request (width 2) concurrent with good ones
+            results = await asyncio.gather(
+                *([front.choose(np.asarray([15.0, 2.0]))]
+                  + [front.choose(contexts[i]) for i in range(6)]),
+                return_exceptions=True)
+            return results, front.stats
+
+    results, stats = asyncio.run(drive())
+    good = [r for r in results[1:]]
+    assert not any(isinstance(r, Exception) for r in good)
+    want = svc.choose_cluster_batch(contexts)
+    for a, b in zip(good, want):
+        _assert_same_choice(a, b)
+    # the width-1 group coalesced into ONE dispatch despite the stray
+    # width-2 arrival (the fakes accept any width, so it also answered)
+    assert stats.batches <= 3 and stats.requests == 7
+
+
+def test_serve_stats_mean_batch_is_bounded_and_exact():
+    """Regression: ServeStats kept every batch size in an ever-growing
+    list; a long-lived lane leaked one entry per tick.  The running
+    sum/count form must keep mean_batch exact."""
+    from repro.serve.config_service import ServeStats
+    s = ServeStats()
+    assert s.mean_batch == 0.0
+    sizes = [1, 7, 3, 128, 1]
+    for n in sizes:
+        s.record_batch(n)
+    assert s.requests == sum(sizes)
+    assert s.batches == len(sizes)
+    np.testing.assert_allclose(s.mean_batch, np.mean(sizes))
+    assert not hasattr(s, "batch_sizes")      # the unbounded list is gone
+
+
 def test_async_frontend_stop_cancels_pending_requests():
     """stop() must not strand an in-flight choose(): anything still queued
     is cancelled, not left hanging forever."""
