@@ -5,21 +5,27 @@ whole collaborative loop (Fig. 4): discover a job (``SearchRequest``),
 predict runtimes (``PredictRequest``), choose a cluster
 (``ChooseRequest``), evaluate models (``ModelErrorsRequest``), and
 contribute runtime data back with provenance (``ContributeRequest``).
+The trust plane rides the same vocabulary: any request wraps in an
+``AuthedRequest`` bearer-token envelope (mandatory on auth-enabled
+gateways) and ``TrustStateRequest`` inspects a contributor's standing.
 ``HubGateway`` routes these across every published ``JobRepo``;
 ``repro.api.codec`` gives every envelope a deterministic JSON form so the
 same objects work in-process today and over HTTP later.
 """
+from repro.api.auth import TrustAuthority
 from repro.api.codec import decode, encode
 from repro.api.gateway import AsyncHubGateway, HubGateway
-from repro.api.types import (API_VERSION, ChooseRequest, ChooseResult,
-                             ContributeRequest, ContributeResult, JobInfo,
-                             ModelErrorsRequest, ModelErrorsResult,
-                             PredictRequest, PredictResult, Response,
-                             SearchRequest, SearchResult)
+from repro.api.types import (API_VERSION, AuthedRequest, ChooseRequest,
+                             ChooseResult, ContributeRequest,
+                             ContributeResult, JobInfo, ModelErrorsRequest,
+                             ModelErrorsResult, PredictRequest, PredictResult,
+                             Response, SearchRequest, SearchResult,
+                             TrustStateRequest, TrustStateResult)
 
 __all__ = [
-    "API_VERSION", "ChooseRequest", "ChooseResult", "ContributeRequest",
-    "ContributeResult", "JobInfo", "ModelErrorsRequest", "ModelErrorsResult",
-    "PredictRequest", "PredictResult", "Response", "SearchRequest",
-    "SearchResult", "HubGateway", "AsyncHubGateway", "decode", "encode",
+    "API_VERSION", "AuthedRequest", "ChooseRequest", "ChooseResult",
+    "ContributeRequest", "ContributeResult", "JobInfo", "ModelErrorsRequest",
+    "ModelErrorsResult", "PredictRequest", "PredictResult", "Response",
+    "SearchRequest", "SearchResult", "TrustStateRequest", "TrustStateResult",
+    "HubGateway", "AsyncHubGateway", "TrustAuthority", "decode", "encode",
 ]

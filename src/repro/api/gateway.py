@@ -23,18 +23,22 @@ from __future__ import annotations
 
 import asyncio
 from collections import OrderedDict
+from dataclasses import replace
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.api.types import (ERR_BAD_REQUEST, ERR_INTERNAL, ERR_UNKNOWN_JOB,
-                             ChooseRequest, ChooseResult, ContributeRequest,
+from repro.api.auth import UNMETERED, TrustAuthority
+from repro.api.types import (ERR_BAD_REQUEST, ERR_INTERNAL, ERR_TIMEOUT,
+                             ERR_UNKNOWN_JOB, AuthedRequest, ChooseRequest,
+                             ChooseResult, ContributeRequest,
                              ContributeResult, JobInfo, ModelErrorsRequest,
                              ModelErrorsResult, PredictRequest, PredictResult,
-                             Response, SearchRequest, SearchResult)
+                             Response, SearchRequest, SearchResult,
+                             TrustStateRequest, TrustStateResult)
 from repro.core.features import RuntimeData
 from repro.core.service import ConfigurationService
-from repro.serve.config_service import BatchLane, ServeStats
+from repro.serve.config_service import BatchLane, LaneTimeoutError, ServeStats
 
 
 class UnknownJobError(KeyError):
@@ -47,22 +51,34 @@ class HubGateway:
     ``prices`` ($ per node-hour per machine type) and ``scaleouts`` are
     the serving-time configuration grid shared by every job; they would
     come from the deployment's cloud catalog in production.
+
+    ``auth`` (a ``repro.api.auth.TrustAuthority``) turns the trust plane
+    on: EVERY operation must then arrive wrapped in an ``AuthedRequest``
+    whose token authenticates an unbanned contributor with quota left —
+    admission happens before the request touches any ``JobRepo``, and
+    refusals are typed ``unauthorized`` / ``quota_exceeded`` error
+    envelopes.  With ``auth=None`` (the default) the gateway stays
+    unauthenticated and wrapped requests are transparently unwrapped.
     """
 
     def __init__(self, hub, prices: Dict[str, float],
                  scaleouts: Sequence[int], *, confidence: float = 0.95,
-                 seed: int = 0):
+                 seed: int = 0, auth: Optional[TrustAuthority] = None):
         self.hub = hub
+        self.auth = auth
         self.prices = dict(prices)
         self.scaleouts = tuple(int(s) for s in scaleouts)
         self.confidence = confidence
         self.seed = seed
-        # (job, seed) -> (store version, model-spec objects, service): an
-        # accepted contribution bumps the version and a maintainer's
-        # add_custom_model / spec re-registration changes the spec tuple
-        # (the same invalidation contract JobRepo.predictor_for keeps) —
-        # either lazily rebuilds the service from the repo's (cached,
-        # possibly warm-started) predictors on the next request.
+        # (job, seed) -> (store version, trust version, model-spec
+        # objects, service): an accepted contribution bumps the store
+        # version, a judged contribution can bump the TRUST version
+        # (reputation moved, so stored rows re-weight), and a
+        # maintainer's add_custom_model / spec re-registration changes
+        # the spec tuple (the same invalidation contract
+        # JobRepo.predictor_for keeps) — any of them lazily rebuilds the
+        # service from the repo's (cached, possibly warm-started)
+        # predictors on the next request.
         # LRU-capped: the seed is CLIENT-supplied, so an uncapped dict
         # would grow one service per distinct seed in hostile traffic
         self._services: "OrderedDict[Tuple[str, int], tuple]" = OrderedDict()
@@ -87,19 +103,22 @@ class HubGateway:
         seed = self.seed if seed is None else int(seed)
         repo = self._repo(job)
         version = repo.store.version
+        trust_version = repo.store.trust_version
         # key on the spec OBJECTS like predictor_for: a re-registered or
         # newly added custom model must invalidate the cached service
         specs = tuple(get_model(n) for n in repo.model_names)
         entry = self._services.get((job, seed))
-        if entry is None or entry[0] != version or entry[1] != specs:
+        if entry is None or entry[0] != version \
+                or entry[1] != trust_version or entry[2] != specs:
             svc = ConfigurationService.from_repo(
                 repo, None, self.prices, self.scaleouts, seed=seed,
                 confidence=self.confidence)
-            self._services[(job, seed)] = entry = (version, specs, svc)
+            self._services[(job, seed)] = entry = (version, trust_version,
+                                                   specs, svc)
             while len(self._services) > self.MAX_SERVICES:
                 self._services.popitem(last=False)
         self._services.move_to_end((job, seed))
-        return entry[2]
+        return entry[3]
 
     def _rows(self, repo, X, y=None) -> np.ndarray:
         """Validated [n, d] feature block for ``repo``'s schema."""
@@ -122,9 +141,36 @@ class HubGateway:
                 f"{', '.join(repo.store.data.machines) or 'none'})")
         return machine_type
 
+    # ------------------------- trust admission ----------------------------
+    def _admit(self, request, expect=None):
+        """Unwrap + authenticate one request BEFORE it touches any repo.
+
+        Returns ``(inner_request, contributor_id, error_response)``.  On
+        admission ``error_response`` is None and ``contributor_id`` is the
+        token's identity (None on an unauthenticated gateway).  Refusals
+        come back as typed ``unauthorized`` / ``quota_exceeded`` error
+        envelopes — admission never raises."""
+        token = None
+        inner = request
+        if isinstance(inner, AuthedRequest):
+            token = inner.token
+            inner = inner.request
+        cid = None
+        if self.auth is not None:
+            cid, code, detail = self.auth.admit(token)
+            if cid is None:
+                return inner, None, Response.failure(code, detail)
+        if expect is not None and not isinstance(inner, expect):
+            return inner, cid, Response.failure(
+                ERR_BAD_REQUEST,
+                f"expected a {expect.__name__}, got "
+                f"{type(inner).__name__}")
+        return inner, cid, None
+
     # ------------------------- operations ---------------------------------
-    def predict(self, req: PredictRequest) -> Response[PredictResult]:
-        return self._respond(self._predict, req)
+    def predict(self, req) -> Response[PredictResult]:
+        req, _, err = self._admit(req, PredictRequest)
+        return err if err is not None else self._respond(self._predict, req)
 
     def _seed(self, seed: Optional[int]) -> int:
         """Request-level seed override; None means the gateway default."""
@@ -139,8 +185,9 @@ class HubGateway:
         return PredictResult(tuple(float(v) for v in t), pred.selected,
                              float(pred.mu), float(pred.sigma))
 
-    def choose(self, req: ChooseRequest) -> Response[ChooseResult]:
-        return self._respond(self._choose, req)
+    def choose(self, req) -> Response[ChooseResult]:
+        req, _, err = self._admit(req, ChooseRequest)
+        return err if err is not None else self._respond(self._choose, req)
 
     def _choose(self, req: ChooseRequest) -> ChooseResult:
         repo = self._repo(req.job)
@@ -153,7 +200,14 @@ class HubGateway:
             ctx[None, :], np.asarray([req.t_max], np.float64))[0]
         return ChooseResult.from_choice(choice)
 
-    def contribute(self, req: ContributeRequest) -> Response[ContributeResult]:
+    def contribute(self, req) -> Response[ContributeResult]:
+        req, cid, err = self._admit(req, ContributeRequest)
+        if err is not None:
+            return err
+        if cid is not None and req.contributor_id != cid:
+            # the TOKEN is the identity on an auth-enabled gateway: a
+            # client cannot stamp rows (or reputations) onto someone else
+            req = replace(req, contributor_id=cid)
         return self._respond(self._contribute, req)
 
     def _contribute(self, req: ContributeRequest) -> ContributeResult:
@@ -173,9 +227,10 @@ class HubGateway:
             float(report.candidate_mape), report.reason, req.contributor_id,
             len(repo.store), repo.store.version, repo.store.fingerprint)
 
-    def model_errors(self, req: ModelErrorsRequest
-                     ) -> Response[ModelErrorsResult]:
-        return self._respond(self._model_errors, req)
+    def model_errors(self, req) -> Response[ModelErrorsResult]:
+        req, _, err = self._admit(req, ModelErrorsRequest)
+        return err if err is not None else self._respond(self._model_errors,
+                                                         req)
 
     def _model_errors(self, req: ModelErrorsRequest) -> ModelErrorsResult:
         repo = self._repo(req.job)
@@ -190,8 +245,9 @@ class HubGateway:
                       for m, (mape, mae) in sorted(errs.items()))
         return ModelErrorsResult(table, selected)
 
-    def search(self, req: SearchRequest) -> Response[SearchResult]:
-        return self._respond(self._search, req)
+    def search(self, req) -> Response[SearchResult]:
+        req, _, err = self._admit(req, SearchRequest)
+        return err if err is not None else self._respond(self._search, req)
 
     def _job_info(self, repo) -> JobInfo:
         """Per-(job, store version) cached metadata: contributor counts
@@ -221,20 +277,72 @@ class HubGateway:
             lambda j: tuple(sorted(
                 self._repo(j).store.data.contributor_counts().items())), job)
 
+    def trust_state(self, req) -> Response[TrustStateResult]:
+        req, _, err = self._admit(req, TrustStateRequest)
+        return err if err is not None else self._respond(self._trust_state,
+                                                         req)
+
+    def _trust_state(self, req: TrustStateRequest) -> TrustStateResult:
+        cid = str(req.contributor_id)
+        if self.auth is not None:
+            known = self.auth.known(cid)
+            banned = self.auth.is_banned(cid)
+            quota = float(self.auth.quota_remaining(cid))
+        else:
+            known, banned, quota = False, False, UNMETERED
+        reps = []
+        for job in self.hub.jobs():
+            trust = self.hub.get(job).store.trust
+            if trust is not None and cid in trust:
+                rec = trust.stats(cid)
+                reps.append((job, float(trust.reputation(cid)),
+                             int(rec.accepted), int(rec.rejected)))
+        return TrustStateResult(cid, known, banned, quota, tuple(reps))
+
+    # ------------------------- admin surface ------------------------------
+    # Operator-side token management: these are direct method calls (not
+    # wire requests) because whoever holds the gateway object IS the hub
+    # operator.  They raise on an unauthenticated gateway — there is no
+    # authority to manage.
+
+    def _authority(self) -> TrustAuthority:
+        if self.auth is None:
+            raise RuntimeError(
+                "gateway has no TrustAuthority: construct it with "
+                "auth=TrustAuthority(...) to manage tokens")
+        return self.auth
+
+    def issue_token(self, contributor_id: str) -> str:
+        return self._authority().issue_token(contributor_id)
+
+    def revoke_token(self, token: str) -> bool:
+        return self._authority().revoke_token(token)
+
+    def ban_contributor(self, contributor_id: str) -> None:
+        self._authority().ban(contributor_id)
+
+    def unban_contributor(self, contributor_id: str) -> bool:
+        return self._authority().unban(contributor_id)
+
     # ------------------------- uniform dispatch ---------------------------
     _HANDLERS = {
         PredictRequest: "predict", ChooseRequest: "choose",
         ContributeRequest: "contribute", ModelErrorsRequest: "model_errors",
-        SearchRequest: "search",
+        SearchRequest: "search", TrustStateRequest: "trust_state",
     }
 
     def handle(self, request) -> Response:
-        """Serve any API v1 request object (front-end dispatch point)."""
-        name = self._HANDLERS.get(type(request))
+        """Serve any API v1 request object (front-end dispatch point).
+        ``AuthedRequest`` wrappers route on their INNER request; the
+        wrapper itself travels on to the operation so admission sees the
+        token."""
+        inner = request.request if isinstance(request, AuthedRequest) \
+            else request
+        name = self._HANDLERS.get(type(inner))
         if name is None:
             return Response.failure(
                 ERR_BAD_REQUEST,
-                f"not an API v1 request: {type(request).__name__}")
+                f"not an API v1 request: {type(inner).__name__}")
         return getattr(self, name)(request)
 
     def _respond(self, fn, req) -> Response:
@@ -271,10 +379,14 @@ class AsyncHubGateway:
     MAX_LANES = 64
 
     def __init__(self, gateway: HubGateway, *, max_batch: int = 256,
-                 tick_s: float = 0.0):
+                 tick_s: float = 0.0, timeout_s: Optional[float] = None):
         self.gateway = gateway
         self.max_batch = max_batch
         self.tick_s = tick_s
+        # per-dispatch deadline forwarded to every lane: a tick that
+        # exceeds it answers ITS requests with typed ``timeout`` error
+        # envelopes while the lane worker keeps serving (None = no bound)
+        self.timeout_s = timeout_s
         self._lanes: "OrderedDict[str, BatchLane]" = OrderedDict()
         # strong refs to in-flight eviction stop() tasks: the event loop
         # only holds tasks weakly, and a GC'd stop task would leak the
@@ -323,7 +435,8 @@ class AsyncHubGateway:
                         for c in choices]
 
             lane = BatchLane(dispatch, width=repo.schema.n_features - 1,
-                             max_batch=self.max_batch, tick_s=self.tick_s)
+                             max_batch=self.max_batch, tick_s=self.tick_s,
+                             timeout_s=self.timeout_s)
             lane.start()
             self._lanes[key] = lane
             while len(self._lanes) > self.MAX_LANES:
@@ -345,7 +458,13 @@ class AsyncHubGateway:
         return out
 
     # ------------------------- request path -------------------------------
-    async def choose(self, req: ChooseRequest) -> Response[ChooseResult]:
+    async def choose(self, req) -> Response[ChooseResult]:
+        # admission (auth + quota) happens HERE, before the request is
+        # enqueued on any lane: a rate-limited contributor never occupies
+        # micro-batch capacity
+        req, _, err = self.gateway._admit(req, ChooseRequest)
+        if err is not None:
+            return err
         try:
             lane = self._lane(req.job, req.seed)
             # submit() canonicalizes the row; the lane dispatch already
@@ -354,6 +473,8 @@ class AsyncHubGateway:
         except UnknownJobError as e:
             return Response.failure(
                 ERR_UNKNOWN_JOB, f"no published repo for job {e.args[0]!r}")
+        except LaneTimeoutError as e:
+            return Response.failure(ERR_TIMEOUT, str(e))
         except (ValueError, TypeError) as e:
             # same classification as the sync path's _respond: a payload
             # the lane cannot parse is the CLIENT's error, not a fault
@@ -370,7 +491,10 @@ class AsyncHubGateway:
 
     async def handle_async(self, request) -> Response:
         """Uniform async dispatch: choose requests ride the micro-batch
-        lanes, everything else serves inline."""
-        if isinstance(request, ChooseRequest):
+        lanes, everything else serves inline (AuthedRequest wrappers
+        route on their inner request, like the sync ``handle``)."""
+        inner = request.request if isinstance(request, AuthedRequest) \
+            else request
+        if isinstance(inner, ChooseRequest):
             return await self.choose(request)
         return self.gateway.handle(request)

@@ -28,6 +28,13 @@ API_VERSION = "v1"
 ERR_UNKNOWN_JOB = "unknown_job"
 ERR_BAD_REQUEST = "bad_request"
 ERR_INTERNAL = "internal"
+#: trust plane: request carried no/invalid/revoked token, or the
+#: contributor is banned (auth-enabled gateways only)
+ERR_UNAUTHORIZED = "unauthorized"
+#: trust plane: the contributor's token-bucket rate quota is exhausted
+ERR_QUOTA_EXCEEDED = "quota_exceeded"
+#: serving: the micro-batch lane's dispatch missed its per-tick deadline
+ERR_TIMEOUT = "timeout"
 
 T = TypeVar("T")
 
@@ -81,6 +88,30 @@ class ModelErrorsRequest:
 class SearchRequest:
     """Discover published job repos by algorithm/job substring."""
     algorithm: str = ""
+
+
+@dataclass(frozen=True, slots=True)
+class TrustStateRequest:
+    """Inspect one contributor's trust state (auth standing, remaining
+    quota, per-job reputation) — the admin/inspection surface of the
+    trust plane."""
+    contributor_id: str
+
+
+@dataclass(frozen=True, slots=True)
+class AuthedRequest:
+    """Any API v1 request wrapped with a bearer token.
+
+    On an auth-enabled gateway EVERY operation must arrive wrapped; the
+    gateway authenticates the token, charges the contributor's rate
+    quota, and serves the inner request under the authenticated identity
+    (a wrapped ``ContributeRequest``'s ``contributor_id`` is overridden
+    by the token's identity — clients cannot spoof provenance).  On an
+    unauthenticated gateway (the default) the wrapper is transparently
+    unwrapped, so clients can adopt tokens before their hub turns auth
+    on."""
+    token: str
+    request: object                       # one of the request envelopes
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +184,21 @@ class SearchResult:
     jobs: Tuple[JobInfo, ...]
 
 
+@dataclass(frozen=True, slots=True)
+class TrustStateResult:
+    """One contributor's trust state across the gateway.
+
+    ``reputations`` carries one ``(job, reputation, accepted, rejected)``
+    row per job whose store ledger has judged this contributor;
+    ``quota_remaining`` is +inf on an unauthenticated gateway (no quota
+    accounting)."""
+    contributor_id: str
+    known: bool                           # has an issued (unrevoked) token
+    banned: bool
+    quota_remaining: float
+    reputations: Tuple[Tuple[str, float, int, int], ...]
+
+
 # ---------------------------------------------------------------------------
 # the uniform envelope
 # ---------------------------------------------------------------------------
@@ -181,7 +227,8 @@ class Response(Generic[T]):
 
 
 REQUEST_TYPES = (PredictRequest, ChooseRequest, ContributeRequest,
-                 ModelErrorsRequest, SearchRequest)
+                 ModelErrorsRequest, SearchRequest, TrustStateRequest,
+                 AuthedRequest)
 RESULT_TYPES = (PredictResult, ChooseResult, ContributeResult,
-                ModelErrorsResult, JobInfo, SearchResult)
+                ModelErrorsResult, JobInfo, SearchResult, TrustStateResult)
 MESSAGE_TYPES = REQUEST_TYPES + RESULT_TYPES + (Response,)

@@ -28,7 +28,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.features import JobSchema, RuntimeData
+from repro.core.features import (UNKNOWN_CONTRIBUTOR, JobSchema, RuntimeData)
+from repro.core.trust import ReputationLedger
 
 
 @dataclass
@@ -63,11 +64,19 @@ class RuntimeDataStore:
     def __init__(self, data: RuntimeData, *, reject_ratio: float = 1.5,
                  reject_slack: float = 0.02, seed: int = 0,
                  model_names: Optional[Sequence[str]] = None,
-                 max_validation_rows: int = 1024):
+                 max_validation_rows: int = 1024,
+                 trust: Optional[ReputationLedger] = None):
         self.reject_ratio = reject_ratio
         self.reject_slack = reject_slack
         self.seed = seed
         self.model_names = model_names
+        # optional reputation ledger (repro.core.trust): when present,
+        # every judged contribution records an outcome against its
+        # contributor, acceptance thresholds adapt to reputation, and
+        # row_weights() derives per-row fit weights from it.  None (the
+        # default) keeps the §III-C.b scheme byte-identical to the
+        # trust-free store.
+        self.trust = trust
         # validation retrains/tests on at most this many existing rows per
         # side: keeps the per-contribution cost flat as the collaborative
         # store grows (the optimistic models' group aux is O(n^2), so
@@ -114,6 +123,41 @@ class RuntimeDataStore:
         O(delta), not O(N), to advance it."""
         return self._hasher.hexdigest()
 
+    # ----------------------- trust plane ----------------------------------
+    @property
+    def trust_version(self) -> int:
+        """Ledger version for downstream cache keys (-1 = no ledger).
+
+        A REJECTED contribution never bumps ``version`` (no data changed)
+        but does change its contributor's reputation — and therefore the
+        reputation-derived row weights of rows ALREADY in the store at the
+        next fit.  Fit/service caches must key on this alongside the data
+        version."""
+        return -1 if self.trust is None else self.trust.version
+
+    def row_weights(self, view: RuntimeData) -> Optional[np.ndarray]:
+        """Reputation-derived per-row fit weights for ``view`` (typically
+        a cached ``machine_view`` of this store's data), or None when
+        every row is at full weight — the None fast path keeps trust-free
+        (and all-neutral) fits on the exact unweighted engine path."""
+        if self.trust is None or len(view) == 0:
+            return None
+        vocab = view.contributors or (UNKNOWN_CONTRIBUTOR,)
+        per = np.asarray([self.trust.row_weight(c) for c in vocab],
+                         np.float64)
+        if np.all(per >= 1.0 - 1e-12):
+            return None
+        if not view.contributors:        # pre-provenance store: all rows
+            return np.full(len(view), per[0])
+        return per[view.ccodes]
+
+    def _reject_limit(self, baseline_mape: float,
+                      threshold_scale: float = 1.0) -> float:
+        """The §III-C.b acceptance limit, scaled by the contributor's
+        reputation-derived strictness (scale < 1 = stricter)."""
+        return (baseline_mape * self.reject_ratio + self.reject_slack) \
+            * threshold_scale
+
     # ----------------------- persistence ---------------------------------
     def save(self, path: str) -> None:
         tmp = path + ".tmp"
@@ -125,6 +169,17 @@ class RuntimeDataStore:
     def load(cls, path: str, schema: JobSchema, **kw) -> "RuntimeDataStore":
         with open(path) as f:
             return cls(RuntimeData.from_tsv(f.read(), schema), **kw)
+
+    @staticmethod
+    def _accountable_contributor(contribution: RuntimeData) -> str:
+        """The identity a contribution's validation outcome is recorded
+        against: its single contributor when provenance is unambiguous,
+        else ``UNKNOWN_CONTRIBUTOR`` (mixed-provenance batches cannot pin
+        blame on one collaborator; anonymous ones pool under the unknown
+        identity, which down-weights unattributed data collectively if
+        anonymous contributions keep failing)."""
+        ids = sorted(contribution.contributor_counts())
+        return ids[0] if len(ids) == 1 else UNKNOWN_CONTRIBUTOR
 
     # ----------------------- validation (§III-C.b) ------------------------
     def _model_specs(self):
@@ -139,14 +194,23 @@ class RuntimeDataStore:
 
         All models fit through the engine's process-wide cached executables
         (one dispatch each, single sync) — no throwaway CV predictor is
-        constructed per validation call."""
+        constructed per validation call.
+
+        With a trust ledger the fit is REPUTATION-WEIGHTED (same weights
+        the serving fits use): previously ingested suspect rows cannot
+        balloon the baseline error — and with it the §III-C.b reject
+        limit — so one accepted poison batch does not hold the door open
+        for the next.  Validation measures the marginal damage a
+        contribution would do under the weighting it would actually enter
+        the store with."""
         from repro.core import engine
         tr = train.machine_view(machine)
         te = test.machine_view(machine)
         if len(tr) < 5 or len(te) < 2:
             return np.nan
         return engine.holdout_mape(self._model_specs(), tr.X, tr.y,
-                                   te.X, te.y)
+                                   te.X, te.y,
+                                   row_weight=self.row_weights(tr))
 
     def _stratified_split(self, rng) -> tuple:
         """Stratified-by-machine (holdout, train) index split.
@@ -170,7 +234,8 @@ class RuntimeDataStore:
                 _waterfill(trains, self.max_validation_rows))
 
     def validate(self, contribution: RuntimeData,
-                 machine: Optional[str] = None) -> ValidationReport:
+                 machine: Optional[str] = None,
+                 threshold_scale: float = 1.0) -> ValidationReport:
         """Validate EVERY machine type present in the contribution.
 
         A mixed contribution used to be judged only against its first row's
@@ -182,7 +247,9 @@ class RuntimeDataStore:
         validate against — that is how a new machine type bootstraps) but
         named in the report reason so the bypass is visible.  ``machine``
         restricts validation to one explicit machine type (legacy
-        single-machine call sites)."""
+        single-machine call sites).  ``threshold_scale`` scales the reject
+        limit (< 1 = stricter; the trust plane passes the contributor's
+        reputation-derived strictness)."""
         if len(contribution) == 0:
             return ValidationReport(
                 False, np.nan, np.nan,
@@ -204,7 +271,7 @@ class RuntimeDataStore:
             if np.isnan(base) or np.isnan(cand):
                 unjudged.append(str(m))  # too little data to judge this group
                 continue
-            limit = base * self.reject_ratio + self.reject_slack
+            limit = self._reject_limit(base, threshold_scale)
             if cand > limit:
                 return ValidationReport(
                     False, base, cand,
@@ -249,7 +316,40 @@ class RuntimeDataStore:
             check_tsv_field(c, "contributor id")
         if contributor is not None:
             contribution = contribution.with_contributor(contributor)
-        report = self.validate(contribution)
+        cid = self._accountable_contributor(contribution)
+        scale = (1.0 if self.trust is None
+                 else self.trust.threshold_scale(cid))
+        report = self.validate(contribution, threshold_scale=scale)
+        graced = False
+        if (not report.accepted and self.trust is not None
+                and len(contribution)
+                and np.isfinite(report.baseline_mape)
+                and np.isfinite(report.candidate_mape)
+                and self.trust.allows_grace(cid)):
+            # graceful degradation for contributors in high standing: a
+            # near-miss is ingested anyway (their history says the data is
+            # probably fine and the emulated validation split noisy) — but
+            # only within GRACE_RATIO of the limit, and the zero-quality
+            # outcome recorded below drains the reputation that earned the
+            # grace, so repeated failures revert to hard rejection AND
+            # down-weight the rows this grace let in
+            limit = self._reject_limit(report.baseline_mape, scale)
+            if report.candidate_mape <= limit * self.trust.GRACE_RATIO:
+                graced = True
+                report = ValidationReport(
+                    True, report.baseline_mape, report.candidate_mape,
+                    "accepted via graceful degradation (reputation "
+                    f"{self.trust.reputation(cid):.2f}): {report.reason}")
+        if (self.trust is not None and np.isfinite(report.baseline_mape)
+                and np.isfinite(report.candidate_mape)):
+            # judged contributions record an outcome (unjudged ones —
+            # empty stores, bootstrap machine types — carry no evidence
+            # about the contributor either way)
+            quality = 0.0 if (graced or not report.accepted) else \
+                self.trust.quality_of(
+                    report.baseline_mape, report.candidate_mape,
+                    self._reject_limit(report.baseline_mape, scale))
+            self.trust.record_outcome(cid, report.accepted, quality)
         if report.accepted:
             was_provenance = self._data.has_provenance
             # bypass the data setter: the append only adds the delta rows,

@@ -147,7 +147,9 @@ def bucket_rows(n: int, lo: int = 32) -> int:
 
 def holdout_errors(specs: Sequence[ModelSpec], X_tr: np.ndarray,
                    y_tr: np.ndarray, X_te: np.ndarray,
-                   y_te: np.ndarray) -> Dict[str, Tuple[float, float]]:
+                   y_te: np.ndarray,
+                   row_weight: Optional[np.ndarray] = None
+                   ) -> Dict[str, Tuple[float, float]]:
     """Held-out (MAPE, MAE) per model, one fused dispatch per model and a
     single host sync at the end — the batched primitive behind both
     contribution validation and the evaluation replay plane's per-model
@@ -157,6 +159,10 @@ def holdout_errors(specs: Sequence[ModelSpec], X_tr: np.ndarray,
     invalid masks (every pool model fits weighted, so w=0 rows are inert):
     repeated evaluations against a growing store hit the SAME compiled
     executable instead of retracing per store size.
+
+    ``row_weight`` (fractional, [n_tr]) scales each training row's weight
+    in the fit — the trust plane's reputation-derived weights; None keeps
+    every real row at 1.0 (the exact historical path).
     """
     X_tr64 = np.asarray(X_tr, np.float64)
     n_tr, n_te = len(y_tr), len(y_te)
@@ -166,7 +172,7 @@ def holdout_errors(specs: Sequence[ModelSpec], X_tr: np.ndarray,
     yp = np.ones(b_tr, np.float32)
     yp[:n_tr] = y_tr
     w = np.zeros(b_tr, np.float32)
-    w[:n_tr] = 1.0
+    w[:n_tr] = 1.0 if row_weight is None else row_weight
     Xq = np.zeros((b_te, Xp.shape[1]), np.float64)
     Xq[:n_te] = np.asarray(X_te, np.float64)
     yq = np.ones(b_te, np.float32)
@@ -185,10 +191,12 @@ def holdout_errors(specs: Sequence[ModelSpec], X_tr: np.ndarray,
 
 def holdout_mape(specs: Sequence[ModelSpec], X_tr: np.ndarray,
                  y_tr: np.ndarray, X_te: np.ndarray,
-                 y_te: np.ndarray) -> float:
+                 y_te: np.ndarray,
+                 row_weight: Optional[np.ndarray] = None) -> float:
     """Best (lowest) held-out MAPE over the model pool (§III-C.b
     contribution validation consumes exactly this scalar)."""
-    errs = holdout_errors(specs, X_tr, y_tr, X_te, y_te)
+    errs = holdout_errors(specs, X_tr, y_tr, X_te, y_te,
+                          row_weight=row_weight)
     return min(mape for mape, _ in errs.values())
 
 

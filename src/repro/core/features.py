@@ -284,9 +284,15 @@ class RuntimeData:
     # ---------------- contributor provenance -------------------------------
     @property
     def contributor(self) -> np.ndarray:
-        """[n] contributor-id strings (decoded from codes on demand)."""
+        """[n] contributor-id strings (decoded from codes on demand).
+
+        A store assembled before provenance existed can carry an EMPTY
+        contributor vocabulary (``from_columns(..., contributors=())``);
+        its rows are provenance-unrecorded, which decodes to
+        ``UNKNOWN_CONTRIBUTOR`` — not to empty strings, which would
+        corrupt a TSV encoding and mislead provenance stats."""
         if not self.contributors:
-            return np.empty(self._n, dtype="<U1")
+            return np.full(self._n, UNKNOWN_CONTRIBUTOR)
         return np.asarray(self.contributors)[self.ccodes]
 
     @property
@@ -323,9 +329,21 @@ class RuntimeData:
             ccodes=np.zeros(self._n, np.int32))
 
     def contributor_counts(self) -> Dict[str, int]:
-        """Rows per contributor id (provenance stats for the gateway)."""
+        """Rows per contributor id (provenance stats for the gateway).
+
+        Codes outside the vocabulary — a store that predates provenance
+        entirely (empty vocabulary) or was assembled from raw columns with
+        dangling codes — aggregate under ``UNKNOWN_CONTRIBUTOR`` instead
+        of raising: the gateway's ``contributor_stats`` must answer with a
+        well-formed table for every store it can serve."""
         used, counts = np.unique(self.ccodes, return_counts=True)
-        return {self.contributors[c]: int(k) for c, k in zip(used, counts)}
+        out: Dict[str, int] = {}
+        for c, k in zip(used, counts):
+            name = (self.contributors[c]
+                    if 0 <= c < len(self.contributors)
+                    else UNKNOWN_CONTRIBUTOR)
+            out[name] = out.get(name, 0) + int(k)
+        return out
 
     # ---------------- assembled compatibility views ------------------------
     @property

@@ -37,9 +37,11 @@ class JobRepo:
     # store reuse bucketed executables
     predictor_kw: Dict = field(default_factory=dict)
     # fitted-predictor cache, keyed on everything the fit depends on:
-    # (machine_type, seed, datastore version, model list).  ``contribute``
-    # bumps the store version only when data is accepted, so hub traffic
-    # triggers a refit exactly when the data changed.
+    # (machine_type, seed, datastore version, trust version, model list).
+    # ``contribute`` bumps the store version only when data is accepted —
+    # and the TRUST version whenever a judged contribution moved a
+    # reputation — so hub traffic triggers a refit exactly when the data
+    # or the reputation-derived row weights changed.
     _fit_cache: Dict[tuple, C3OPredictor] = field(default_factory=dict,
                                                   repr=False, compare=False)
 
@@ -53,8 +55,12 @@ class JobRepo:
     def predictor_for(self, machine_type: str, seed: int = 0) -> C3OPredictor:
         from repro.core.models.api import get_model
         # key on the spec OBJECTS, not names: re-registering a custom model
-        # under an existing name must invalidate the cached fit
+        # under an existing name must invalidate the cached fit.  The trust
+        # version rides in the key because a REJECTED contribution changes
+        # reputation (hence the row weights of rows already stored) without
+        # bumping the data version.
         key = (machine_type, seed, self.store.version,
+               self.store.trust_version,
                tuple(get_model(n) for n in self.model_names))
         pred = self._fit_cache.get(key)
         if pred is None:
@@ -63,10 +69,13 @@ class JobRepo:
             # engine as-is — no per-call re-filter or row copies
             d = self.store.data.machine_view(machine_type)
             pred = C3OPredictor(model_names=tuple(self.model_names),
-                                seed=seed, **self.predictor_kw).fit_data(d)
+                                seed=seed, **self.predictor_kw) \
+                .fit_data(d, row_weight=self.store.row_weights(d))
             # stale versions can never be requested again: evict them
-            self._fit_cache = {k: v for k, v in self._fit_cache.items()
-                               if k[2] == self.store.version}
+            self._fit_cache = {
+                k: v for k, v in self._fit_cache.items()
+                if k[2] == self.store.version
+                and k[3] == self.store.trust_version}
             self._fit_cache[key] = pred
         return pred
 
@@ -77,7 +86,7 @@ class JobRepo:
     # an accepted ``contribute`` changes the data, hence the fingerprint,
     # hence invalidates every persisted fit.
 
-    FITS_VERSION = 1
+    FITS_VERSION = 2                     # v2: entries carry trust_version
 
     @staticmethod
     def fits_path(store_path: str) -> str:
@@ -93,12 +102,13 @@ class JobRepo:
         fits of the pre-contribution data — stamping those with the new
         fingerprint would let a fresh process serve stale predictions."""
         entries = []
-        for (machine_type, seed, ver, specs), pred in \
+        for (machine_type, seed, ver, tv, specs), pred in \
                 self._fit_cache.items():
-            if ver != self.store.version:
+            if ver != self.store.version or tv != self.store.trust_version:
                 continue
             entries.append({"machine_type": str(machine_type), "seed": seed,
                             "model_names": tuple(s.name for s in specs),
+                            "trust_version": tv,
                             "state": pred.export_state()})
         blob = pickle.dumps({"format": self.FITS_VERSION,
                              "job": self.job,
@@ -139,11 +149,17 @@ class JobRepo:
             try:
                 if tuple(e["model_names"]) != tuple(self.model_names):
                     continue
+                # a fit made under different reputation state used
+                # different row weights: restoring it would serve stale
+                # weighted predictions (trust ledgers are process state —
+                # a fresh process's ledger rarely matches the saved one)
+                if e["trust_version"] != self.store.trust_version:
+                    continue
                 specs = tuple(get_model(n) for n in self.model_names)
                 d = self.store.data.machine_view(e["machine_type"])
                 pred = C3OPredictor.from_state(e["state"], d.X)
                 key = (e["machine_type"], e["seed"], self.store.version,
-                       specs)
+                       self.store.trust_version, specs)
             except KeyError:             # a model left the registry, or a
                 continue                 # malformed entry: skip, refit later
             except Exception as exc:     # noqa: BLE001

@@ -44,21 +44,31 @@ class C3OPredictor:
     mu: float = 0.0
     sigma: float = 0.0
 
-    def fit_data(self, data) -> "C3OPredictor":
+    def fit_data(self, data, row_weight=None) -> "C3OPredictor":
         """Fit from a columnar ``RuntimeData`` view (typically a cached
         ``machine_view``): the assembled feature batch is adopted as-is —
         ``data.X`` is built once per (machine, data version) and reused by
         every dispatch downstream."""
-        return self.fit(data.X, data.y)
+        return self.fit(data.X, data.y, row_weight=row_weight)
 
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "C3OPredictor":
+    def fit(self, X: np.ndarray, y: np.ndarray,
+            row_weight: Optional[np.ndarray] = None) -> "C3OPredictor":
+        """``row_weight`` (fractional, [n]) down-weights suspect rows in
+        CV selection AND the final fit — the trust plane derives it from
+        contributor reputation (``RuntimeDataStore.row_weights``).  None
+        keeps the exact unweighted path (byte-identical numerics)."""
         X = np.asarray(X, np.float64)
         y = np.asarray(y, np.float64)
         n = len(y)
+        if row_weight is not None:
+            row_weight = np.asarray(row_weight, np.float64)
+            if row_weight.shape != (n,):
+                raise ValueError(f"row_weight has shape {row_weight.shape},"
+                                 f" expected ({n},)")
         rng = np.random.default_rng(self.seed)
         folds = (np.arange(n) if n <= self.max_cv_folds
                  else rng.choice(n, self.max_cv_folds, replace=False))
-        w = None
+        w = row_weight
         if self.pad_rows:
             # always hand cv_select a weight vector — even when n already
             # sits on a bucket boundary — so the fold axis is bucketed too
@@ -69,7 +79,7 @@ class C3OPredictor:
             yp = np.ones(b, np.float64)           # inert targets (w=0)
             yp[:n] = y
             w = np.zeros(b, np.float64)
-            w[:n] = 1.0
+            w[:n] = 1.0 if row_weight is None else row_weight
             X, y = Xp, yp
         specs = [get_model(name) for name in self.model_names]
         best, mapes, mu, sigma = engine.cv_select(specs, X, y, folds,

@@ -81,8 +81,12 @@ class ReplayResult:
 # ---------------------------------------------------------------------------
 
 def _checkpoint(job: str, held: int, step: int, repo: JobRepo,
-                test, cfg: ReplayConfig) -> List[dict]:
-    """Score the held-out user's rows against the current store state."""
+                test, cfg, extra: Optional[dict] = None) -> List[dict]:
+    """Score the held-out user's rows against the current store state.
+
+    ``extra`` key/values are merged into every record — the adversarial
+    replay stamps its ``weighting`` arm here so on/off trajectories share
+    one record stream."""
     out = []
     store_rows = len(repo.store)
     for machine in test.present_machines():
@@ -94,10 +98,13 @@ def _checkpoint(job: str, held: int, step: int, repo: JobRepo,
                                            track_models=cfg.track_models,
                                            seed=cfg.seed)
         for model, (mape, mae) in errs.items():
-            out.append({"job": job, "held_out": held, "step": step,
-                        "store_rows": store_rows, "machine": machine,
-                        "model": model, "mape": mape, "mae": mae,
-                        "selected": selected if model == "c3o" else ""})
+            rec = {"job": job, "held_out": held, "step": step,
+                   "store_rows": store_rows, "machine": machine,
+                   "model": model, "mape": mape, "mae": mae,
+                   "selected": selected if model == "c3o" else ""}
+            if extra:
+                rec.update(extra)
+            out.append(rec)
     return out
 
 

@@ -33,6 +33,14 @@ from repro.core.configurator import ClusterChoice
 from repro.core.service import ConfigurationService
 
 
+class LaneTimeoutError(Exception):
+    """A micro-batch dispatch missed the lane's per-request deadline.
+
+    Raised INTO the affected submit() futures only — the worker itself
+    survives and keeps serving later ticks (the gateway maps this to the
+    typed ``timeout`` error envelope)."""
+
+
 @dataclass
 class ServeStats:
     """Bounded serving counters: the mean batch size is exact as
@@ -74,14 +82,23 @@ class BatchLane:
     own and collects its own outcome, never another group's — a
     malformed first arrival cannot wedge the lane for every later
     well-formed request.
+
+    ``timeout_s`` (None = unbounded, the default) is a per-dispatch
+    deadline: the group's dispatch runs on the loop's executor under
+    ``asyncio.wait_for``, and on expiry the group's futures fail with
+    ``LaneTimeoutError`` while the worker moves on to the next tick — a
+    wedged dispatch costs its own callers a typed ``timeout`` envelope,
+    not the lane.
     """
 
     def __init__(self, dispatch: Callable, *, width: Optional[int] = None,
-                 max_batch: int = 256, tick_s: float = 0.0):
+                 max_batch: int = 256, tick_s: float = 0.0,
+                 timeout_s: Optional[float] = None):
         self.dispatch = dispatch
         self.width = width
         self.max_batch = max_batch
         self.tick_s = tick_s
+        self.timeout_s = timeout_s
         self.stats = ServeStats()
         self._queue: asyncio.Queue = asyncio.Queue()
         self._worker: Optional[asyncio.Task] = None
@@ -164,7 +181,20 @@ class BatchLane:
                         for i, (ctx, tm, _) in enumerate(group):
                             contexts[i] = ctx
                             t_max[i] = tm
-                        results = self.dispatch(contexts, t_max)
+                        results = await self._dispatch_group(contexts, t_max)
+                    except (asyncio.TimeoutError, TimeoutError):
+                        # deadline missed: fail THIS group with the typed
+                        # lane error and keep serving — the dispatch thread
+                        # finishes on the executor in the background, its
+                        # result discarded (the futures are already failed)
+                        err = LaneTimeoutError(
+                            f"micro-batch dispatch exceeded its "
+                            f"{self.timeout_s:g}s deadline "
+                            f"({len(group)} request(s) affected)")
+                        for _, _, fut in group:
+                            if not fut.done():
+                                fut.set_exception(err)
+                        continue
                     except Exception as e:           # fan the failure out
                         for _, _, fut in group:
                             if not fut.done():
@@ -180,6 +210,20 @@ class BatchLane:
                 if not fut.done():
                     fut.cancel()
 
+    async def _dispatch_group(self, contexts, t_max):
+        """One group's dispatch, under the lane deadline if configured.
+
+        Without ``timeout_s`` the dispatch runs inline on the event loop
+        (byte-for-byte the historical path); with it, the dispatch runs on
+        the default executor so ``wait_for`` can abandon it at the
+        deadline without blocking the loop."""
+        if self.timeout_s is None:
+            return self.dispatch(contexts, t_max)
+        loop = asyncio.get_running_loop()
+        return await asyncio.wait_for(
+            loop.run_in_executor(None, self.dispatch, contexts, t_max),
+            self.timeout_s)
+
 
 class AsyncConfigService:
     """Micro-batching wrapper around ONE ``ConfigurationService``.
@@ -192,12 +236,14 @@ class AsyncConfigService:
 
     def __init__(self, service: ConfigurationService, *,
                  max_batch: int = 256, tick_s: float = 0.0,
-                 width: Optional[int] = None):
+                 width: Optional[int] = None,
+                 timeout_s: Optional[float] = None):
         self.service = service
         # width: the expected context-row width, when the caller knows it
         # (rejects malformed requests at enqueue; see BatchLane)
         self._lane = BatchLane(service.choose_cluster_batch, width=width,
-                               max_batch=max_batch, tick_s=tick_s)
+                               max_batch=max_batch, tick_s=tick_s,
+                               timeout_s=timeout_s)
 
     @property
     def stats(self) -> ServeStats:
@@ -224,4 +270,5 @@ class AsyncConfigService:
         return await self._lane.submit(context_row, t_max)
 
 
-__all__: List[str] = ["ServeStats", "BatchLane", "AsyncConfigService"]
+__all__: List[str] = ["ServeStats", "BatchLane", "AsyncConfigService",
+                      "LaneTimeoutError"]

@@ -294,6 +294,57 @@ def generate_user_data(job: str, user: int, seed: int = 0,
     return _measure_design(job, design, seed * 10007 + user + 1)
 
 
+# ---------------------------------------------------------------------------
+# adversarial user emulation (trust-plane evaluation)
+# ---------------------------------------------------------------------------
+
+#: attack repertoire for emulated poisoners.  Each corrupts an honest
+#: user's dataset a different way; all are deliberately MODERATE —
+#: egregious corruption is caught by plain §III-C.b validation, so the
+#: interesting adversary is the one whose data partially slips through
+#: and must be handled by reputation weighting:
+#:   scale  — systematic runtime inflation (a mis-calibrated or lying
+#:            harness reporting ~1.3x the true runtimes)
+#:   noise  — high-variance measurements (no medians, single flaky runs)
+#:   shift  — column shift: under-reports the dataset size feature, so
+#:            runtimes attach to the wrong inputs
+#:   spam   — high-volume near-duplicates of a few measurements (one real
+#:            run uploaded many times with cosmetic jitter)
+ADVERSARY_KINDS = ("scale", "noise", "shift", "spam")
+
+
+def adversarial_user_data(job: str, user: int, seed: int, kind: str,
+                          **design_kw) -> RuntimeData:
+    """A poisoner's contribution-ready dataset: the honest measurements
+    this user WOULD have produced (``generate_user_data``), corrupted by
+    attack ``kind``.  Deterministic in (kind, job, user, seed) via
+    ``derived_rng``, like everything the replay planes consume."""
+    if kind not in ADVERSARY_KINDS:
+        raise ValueError(f"unknown adversary kind {kind!r} "
+                         f"(known: {', '.join(ADVERSARY_KINDS)})")
+    data = generate_user_data(job, user, seed, **design_kw)
+    rng = derived_rng("adversary", kind, job, user, seed)
+    X = np.array(data.X, np.float64)
+    y = np.array(data.y, np.float64)
+    machines = np.asarray(data.machine_type)
+    if kind == "scale":
+        y = y * rng.uniform(1.25, 1.45, size=len(y))
+    elif kind == "noise":
+        y = y * rng.lognormal(0.0, 0.4, size=len(y))
+    elif kind == "shift":
+        # context column 0 (feature column 1: scale-out rides first) is
+        # the dataset size in every job schema
+        X[:, 1] = X[:, 1] * rng.uniform(0.55, 0.75, size=len(y))
+    elif kind == "spam":
+        take = rng.choice(len(y), size=max(1, len(y) // 4), replace=False)
+        reps = 3 * (len(y) // max(1, len(take)))
+        idx = np.sort(np.tile(np.sort(take), reps))
+        X = X[idx]
+        machines = machines[idx]
+        y = y[idx] * rng.lognormal(0.0, 0.05, size=len(idx))
+    return RuntimeData(data.schema, machines, X, y)
+
+
 def generate_all(seed: int = 0) -> Dict[str, RuntimeData]:
     return {job: generate_job_data(job, seed) for job in SCHEMAS}
 

@@ -12,10 +12,12 @@ except ImportError:                       # deterministic example sweeps
     from _hyp_fallback import given, settings, strategies as st
 
 from repro.api import codec
-from repro.api.types import (ChooseRequest, ChooseResult, ContributeRequest,
-                             ContributeResult, JobInfo, ModelErrorsRequest,
-                             ModelErrorsResult, PredictRequest, PredictResult,
-                             Response, SearchRequest, SearchResult)
+from repro.api.types import (AuthedRequest, ChooseRequest, ChooseResult,
+                             ContributeRequest, ContributeResult, JobInfo,
+                             ModelErrorsRequest, ModelErrorsResult,
+                             PredictRequest, PredictResult, Response,
+                             SearchRequest, SearchResult, TrustStateRequest,
+                             TrustStateResult)
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
                            "api_v1.json")
@@ -57,6 +59,26 @@ def golden_samples():
             (("alice", 4), ("unknown", 162))),))),
         "error_envelope": Response.failure(
             "unknown_job", "no published repo for job 'nope'"),
+        # trust plane: token-wrapped requests, trust inspection, and the
+        # typed refusal envelopes (unauthorized / quota_exceeded) plus the
+        # lane-deadline timeout envelope
+        "authed_choose_request": AuthedRequest(
+            token="a3f1" * 8,
+            request=ChooseRequest("grep", (15.0, 0.02), t_max=300.0)),
+        "trust_state_request": TrustStateRequest("alice"),
+        "trust_state_response": Response.success(TrustStateResult(
+            "alice", True, False, 87.5,
+            (("grep", 0.75, 3, 1), ("sort", 0.5, 0, 0)))),
+        "trust_state_response_unmetered": Response.success(TrustStateResult(
+            "üser-42", False, True, math.inf, ())),
+        "unauthorized_envelope": Response.failure(
+            "unauthorized", "unknown or revoked token"),
+        "quota_envelope": Response.failure(
+            "quota_exceeded", "rate quota exhausted for contributor "
+            "'alice' (sustained 50/s, burst 100)"),
+        "timeout_envelope": Response.failure(
+            "timeout", "micro-batch dispatch exceeded its 0.25s deadline "
+            "(3 request(s) affected)"),
     }
 
 
@@ -150,6 +172,23 @@ def test_error_envelope_roundtrip(code, detail):
     back = codec.decode(codec.encode(msg))
     assert not back.ok and back.result is None
     assert back.error_code == code
+
+
+@settings(max_examples=30, deadline=None)
+@given(cid=st.sampled_from(_CONTRIBUTORS), rep=st.floats(0.0, 1.0),
+       quota=st.sampled_from(_SPECIALS), banned=st.booleans(),
+       job=st.sampled_from(_JOBS))
+def test_trust_envelope_roundtrip(cid, rep, quota, banned, job):
+    """Trust-plane envelopes round-trip byte-stably — including the
+    nested request inside an AuthedRequest wrapper and the +inf
+    quota_remaining of an unmetered gateway."""
+    _assert_roundtrip(AuthedRequest(
+        token="ff" * 16, request=TrustStateRequest(cid)))
+    _assert_roundtrip(AuthedRequest(
+        token="00" * 16,
+        request=ChooseRequest(job, (1.0, rep), t_max=quota)))
+    _assert_roundtrip(Response.success(TrustStateResult(
+        cid, True, banned, quota, ((job, rep, 2, 1),))))
 
 
 def test_unencodable_value_raises():

@@ -1,0 +1,84 @@
+"""Adversarial replay plane: twin-arm (reputation weighting off/on)
+trajectories over a poisoned contributor mix are well-formed, summarized
+per job, and byte-identically deterministic for a fixed config."""
+import numpy as np
+import pytest
+
+from repro.eval.adversarial import (ADV_TRAJECTORY_COLUMNS, WEIGHTING_ARMS,
+                                    AdversarialConfig, run_adversarial,
+                                    trajectory_tsv)
+from repro.workloads.spark_emul import (ADVERSARY_KINDS,
+                                        adversarial_user_data,
+                                        generate_user_data)
+
+#: one tiny job keeps this inside the suite's budget — the full 5-job
+#: acceptance run is the CLI / benchmark lane's business
+_CFG = AdversarialConfig(jobs=("sort",), n_users=4, poison_fraction=0.25,
+                         seed=0, chunks_per_user=2, holdouts=1)
+
+
+@pytest.fixture(scope="module")
+def result():
+    return run_adversarial(_CFG)
+
+
+def test_config_partitions_users_deterministically():
+    assert _CFG.poisoners() == (3,)               # last ceil(4 * 0.25) ids
+    assert _CFG.honest() == (0, 1, 2)
+    assert _CFG.attack_of(3) == ADVERSARY_KINDS[0]
+    big = AdversarialConfig(n_users=8, poison_fraction=0.25)
+    assert big.poisoners() == (6, 7)
+    assert [big.attack_of(u) for u in big.poisoners()] == ["scale", "noise"]
+
+
+@pytest.mark.slow
+def test_too_few_honest_users_is_an_explicit_error():
+    with pytest.raises(ValueError, match="honest"):
+        run_adversarial(AdversarialConfig(jobs=("sort",), n_users=2,
+                                          poison_fraction=0.6))
+
+
+def test_adversarial_data_is_deterministic_and_actually_corrupted():
+    honest = generate_user_data("sort", 3, 0)
+    for kind in ADVERSARY_KINDS:
+        a = adversarial_user_data("sort", 3, 0, kind)
+        b = adversarial_user_data("sort", 3, 0, kind)
+        assert a.to_tsv() == b.to_tsv()           # deterministic in the key
+        assert a.to_tsv() != honest.to_tsv()      # and genuinely corrupted
+    with pytest.raises(ValueError):
+        adversarial_user_data("sort", 3, 0, "nonsense")
+
+
+@pytest.mark.slow
+def test_trajectories_cover_both_arms_with_shared_steps(result):
+    arms = {r["weighting"] for r in result.records}
+    assert arms == set(WEIGHTING_ARMS)
+    # the SAME contribution stream drives both arms: step ranges match
+    per_arm = {arm: sorted({r["step"] for r in result.records
+                            if r["weighting"] == arm})
+               for arm in WEIGHTING_ARMS}
+    assert per_arm["off"] == per_arm["on"]
+    assert per_arm["off"][0] == 0                 # seeded-store checkpoint
+    for r in result.records:
+        assert set(ADV_TRAJECTORY_COLUMNS) <= set(r)
+        assert np.isfinite(r["mape"]) and r["store_rows"] > 0
+    assert result.contributions > 0
+    assert 0 < result.accepted <= result.contributions
+
+
+@pytest.mark.slow
+def test_summary_rolls_up_final_mape_per_arm(result):
+    assert set(result.summary) == {"sort"}
+    s = result.summary["sort"]
+    assert s["improvement"] == pytest.approx(s["off_final"] - s["on_final"])
+    assert s["ok"] == (s["on_final"] < s["off_final"])
+    assert result.ok == s["ok"]
+
+
+@pytest.mark.slow
+def test_replay_is_byte_identically_deterministic(result):
+    again = run_adversarial(_CFG)
+    assert again.tsv == result.tsv
+    assert again.fingerprint == result.fingerprint
+    assert trajectory_tsv(result.records) == result.tsv
+    assert result.tsv.splitlines()[0] == "\t".join(ADV_TRAJECTORY_COLUMNS)

@@ -146,3 +146,61 @@ def test_waterfill_allocation_property(seed, cap, n_groups):
     for g, p in enumerate(parts):
         got = np.sum((out >= 1000 * g) & (out < 1000 * (g + 1)))
         assert got >= min(len(p), cap // n_groups)
+
+
+# ---------------------------------------------------------------------------
+# trust plane (repro.core.trust)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), rate=st.sampled_from([0.5, 2.0, 7.5]),
+       burst=st.sampled_from([1.0, 3.0, 10.0]), n=st.integers(1, 120))
+def test_token_bucket_admission_bound_property(seed, rate, burst, n):
+    """Under ANY timestamp sequence — forward jumps, repeats, rewinds —
+    total admissions never exceed burst + rate * (max_t - min_t): a
+    skewed caller clock cannot mint quota."""
+    from repro.core.trust import TokenBucket
+
+    rng = np.random.default_rng(seed)
+    times = rng.uniform(0.0, 60.0, size=n)
+    if rng.integers(0, 2):                 # half the runs: adversarially
+        times = times[np.argsort(times)][::-1]    # rewinding clock
+    bucket = TokenBucket(rate, burst)
+    admitted = sum(bucket.admit(t) for t in times)
+    elapsed = float(times.max() - times.min()) if n > 1 else 0.0
+    assert admitted <= burst + rate * elapsed + 1e-9
+    assert bucket.remaining() >= 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 40))
+def test_reputation_order_independence_property(seed, n):
+    """A commutative batch of outcomes yields the same reputation (and
+    derived weights) in any replay order: the ledger is pure sums, so
+    collaborative history has no order-dependent judgement."""
+    import math
+
+    from repro.core.trust import ReputationLedger
+
+    rng = np.random.default_rng(seed)
+    outcomes = [(f"u{int(rng.integers(0, 4))}", bool(rng.integers(0, 2)),
+                 float(rng.uniform(0.0, 1.0))) for _ in range(n)]
+    ledgers = []
+    for order in (outcomes, outcomes[::-1],
+                  [outcomes[i] for i in rng.permutation(n)]):
+        led = ReputationLedger()
+        for cid, accepted, quality in order:
+            led.record_outcome(cid, accepted, quality)
+        ledgers.append(led)
+    a = ledgers[0]
+    for b in ledgers[1:]:
+        assert b.contributors() == a.contributors()
+        assert b.version == a.version
+        for c in a.contributors():
+            # float sums commute only up to associativity: isclose, not ==
+            assert math.isclose(b.reputation(c), a.reputation(c),
+                                rel_tol=1e-12, abs_tol=1e-12)
+            assert math.isclose(b.row_weight(c), a.row_weight(c),
+                                rel_tol=1e-9, abs_tol=1e-9)
+            assert b.stats(c).accepted == a.stats(c).accepted
+            assert b.stats(c).rejected == a.stats(c).rejected
