@@ -17,6 +17,10 @@ inner evaluation where meaningful; derived = headline metric).
   ingest        contribution ingestion at 10k stored rows: contributions/s
                 and rows/s, cold vs warm, vs the pre-refactor
                 re-encode/re-hash/refit-from-scratch path
+  compact       store lifecycle: one coverage-aware compaction of a 10k-row
+                store — rows retained (>=4x reduction), warm refit speedup
+                (>=2x), held-out MAPE delta (<=1pp); all three are hard
+                SystemExit gates
   eval          collaborative replay plane smoke: leave-one-user-out mini
                 replay wall-clock + per-job accuracy/monotonicity summary
   trust         trust plane smoke: twin-arm adversarial replay (reputation
@@ -392,6 +396,108 @@ def bench_ingest(args):
          "(target >=10x)")
 
 
+def bench_compact(args):
+    """Store lifecycle: coverage-aware compaction of a 10k-row store.
+
+    ``compact.reduce``    one ``compact()`` epoch transition at the default
+                          knobs: wall time + rows retained (acceptance
+                          gate: >= 4x row reduction)
+    ``compact.refit``     warm full-machine refit wall time on the store
+                          data before vs after the epoch transition
+                          (acceptance gate: >= 2x faster after)
+    ``compact.accuracy``  held-out MAPE of predictors fit on the full vs
+                          the compacted store — the grid is re-measured
+                          under an independent noise draw (acceptance
+                          gate: degradation <= 1pp MAPE)
+
+    The gates raise ``SystemExit`` (escaping the harness's per-bench
+    except clause) so CI fails loudly when the reduction policy regresses.
+    """
+    from repro.core.datastore import RuntimeDataStore
+    from repro.core.features import RuntimeData
+    from repro.core.predictor import C3OPredictor
+    from repro.workloads import spark_emul as W
+
+    base = W.generate_job_data("grep")
+    rng = np.random.default_rng(0)
+    n_store = 10_000
+    idx = np.tile(np.arange(len(base)), -(-n_store // len(base)))[:n_store]
+    data = RuntimeData.from_columns(
+        base.schema, base.machines, base.codes[idx], base.scale_out[idx],
+        base.context[idx],
+        base.runtime[idx] * rng.lognormal(0.0, 0.01, n_store))
+    # held-out truth: the same measurement grid under an independent
+    # noise draw — what a NEW reader of the store would need predicted
+    test = RuntimeData.from_columns(
+        base.schema, base.machines, base.codes, base.scale_out,
+        base.context, base.runtime * rng.lognormal(0.0, 0.01, len(base)))
+    machines = sorted(dict.fromkeys(data.machine_type))
+
+    def fit_all(d):
+        return {m: C3OPredictor(max_cv_folds=10, seed=0)
+                .fit(d.machine_view(m).X, d.machine_view(m).y)
+                for m in machines}
+
+    def refit_time(d):
+        best = math.inf
+        for _ in range(2):
+            t0 = time.time()
+            fit_all(d)
+            best = min(best, time.time() - t0)
+        return best
+
+    def held_out_mape(preds):
+        errs = []
+        for m in machines:
+            te = test.machine_view(m)
+            p = np.nan_to_num(preds[m].predict(te.X), nan=1e12, posinf=1e12,
+                              neginf=-1e12)
+            errs.append(float(np.mean(
+                np.abs(p - te.y) / np.maximum(np.abs(te.y), 1e-9))))
+        return float(np.mean(errs))
+
+    store = RuntimeDataStore(data, seed=0)
+    mape_full = held_out_mape(fit_all(data))      # also warms executables
+    refit_full = refit_time(data)
+
+    t0 = time.time()
+    report = store.compact(seed=0)
+    compact_s = time.time() - t0
+    if not report.accepted:
+        raise SystemExit(
+            f"compact.reduce: default-knob compaction of the {n_store}-row "
+            f"corpus must be accepted, got: {report.reason}")
+    reduction = report.rows_before / max(report.rows_after, 1)
+    _row("compact.reduce", compact_s * 1e6,
+         f"rows={report.rows_before}->{report.rows_after} "
+         f"reduction={reduction:.1f}x cells={report.cells} "
+         f"epoch={store.epoch} (target >=4x)")
+    if reduction < 4.0:
+        raise SystemExit(
+            f"compact.reduce: {reduction:.1f}x row reduction is below the "
+            "4x acceptance floor")
+
+    refit_small = refit_time(store.data)
+    speedup = refit_full / max(refit_small, 1e-9)
+    _row("compact.refit", refit_small * 1e6,
+         f"full_us={refit_full * 1e6:.0f} "
+         f"speedup={speedup:.1f}x (target >=2x)")
+    if speedup < 2.0:
+        raise SystemExit(
+            f"compact.refit: warm refit sped up only {speedup:.1f}x; "
+            "the epoch transition must buy >= 2x")
+
+    mape_small = held_out_mape(fit_all(store.data))
+    delta_pp = (mape_small - mape_full) * 100
+    _row("compact.accuracy", compact_s * 1e6,
+         f"mape_full={mape_full:.4f} mape_compacted={mape_small:.4f} "
+         f"delta={delta_pp:+.2f}pp (target <=+1pp)")
+    if delta_pp > 1.0:
+        raise SystemExit(
+            f"compact.accuracy: compaction degraded held-out MAPE by "
+            f"{delta_pp:+.2f}pp (> +1pp budget)")
+
+
 def bench_eval(args):
     """Collaborative replay plane: wall-clock and accuracy summary.
 
@@ -665,6 +771,7 @@ BENCHES = {
     "serve": bench_serve,
     "gateway": bench_gateway,
     "ingest": bench_ingest,
+    "compact": bench_compact,
     "eval": bench_eval,
     "trust": bench_trust,
     "table1": bench_table1,

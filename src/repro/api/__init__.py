@@ -16,16 +16,18 @@ from repro.api.auth import TrustAuthority
 from repro.api.codec import decode, encode
 from repro.api.gateway import AsyncHubGateway, HubGateway
 from repro.api.types import (API_VERSION, AuthedRequest, ChooseRequest,
-                             ChooseResult, ContributeRequest,
-                             ContributeResult, JobInfo, ModelErrorsRequest,
-                             ModelErrorsResult, PredictRequest, PredictResult,
-                             Response, SearchRequest, SearchResult,
-                             TrustStateRequest, TrustStateResult)
+                             ChooseResult, CompactRequest, CompactResult,
+                             ContributeRequest, ContributeResult, JobInfo,
+                             ModelErrorsRequest, ModelErrorsResult,
+                             PredictRequest, PredictResult, Response,
+                             SearchRequest, SearchResult, TrustStateRequest,
+                             TrustStateResult)
 
 __all__ = [
     "API_VERSION", "AuthedRequest", "ChooseRequest", "ChooseResult",
-    "ContributeRequest", "ContributeResult", "JobInfo", "ModelErrorsRequest",
-    "ModelErrorsResult", "PredictRequest", "PredictResult", "Response",
-    "SearchRequest", "SearchResult", "TrustStateRequest", "TrustStateResult",
-    "HubGateway", "AsyncHubGateway", "TrustAuthority", "decode", "encode",
+    "CompactRequest", "CompactResult", "ContributeRequest",
+    "ContributeResult", "JobInfo", "ModelErrorsRequest", "ModelErrorsResult",
+    "PredictRequest", "PredictResult", "Response", "SearchRequest",
+    "SearchResult", "TrustStateRequest", "TrustStateResult", "HubGateway",
+    "AsyncHubGateway", "TrustAuthority", "decode", "encode",
 ]

@@ -43,6 +43,7 @@ class TrustAuthority:
         self._tokens: Dict[str, str] = {}        # token -> contributor id
         self._buckets: Dict[str, TokenBucket] = {}
         self._banned: set = set()
+        self._operators: set = set()
 
     # ------------------------- admin surface ------------------------------
     def issue_token(self, contributor_id: str) -> str:
@@ -70,6 +71,25 @@ class TrustAuthority:
             return True
         return False
 
+    def grant_operator(self, contributor_id: str) -> None:
+        """Mark a contributor as a hub OPERATOR: authorized for store
+        lifecycle operations (``CompactRequest``) on an auth-enabled
+        gateway.  Operator standing rides the same token auth — the
+        contributor still needs an issued token; this only widens what an
+        admitted identity may do."""
+        cid = str(contributor_id)
+        if not cid:
+            raise ValueError("contributor_id must be non-empty")
+        self._operators.add(cid)
+
+    def revoke_operator(self, contributor_id: str) -> bool:
+        """Withdraw operator standing; returns whether it was held."""
+        cid = str(contributor_id)
+        if cid in self._operators:
+            self._operators.remove(cid)
+            return True
+        return False
+
     # ------------------------- inspection ---------------------------------
     def identify(self, token: Optional[str]) -> Optional[str]:
         """Contributor id behind an active token, else None."""
@@ -81,6 +101,9 @@ class TrustAuthority:
 
     def is_banned(self, contributor_id: str) -> bool:
         return str(contributor_id) in self._banned
+
+    def is_operator(self, contributor_id: str) -> bool:
+        return str(contributor_id) in self._operators
 
     def quota_remaining(self, contributor_id: str) -> float:
         """Tokens currently available in the contributor's bucket (the

@@ -30,8 +30,9 @@ import numpy as np
 
 from repro.api.auth import UNMETERED, TrustAuthority
 from repro.api.types import (ERR_BAD_REQUEST, ERR_INTERNAL, ERR_TIMEOUT,
-                             ERR_UNKNOWN_JOB, AuthedRequest, ChooseRequest,
-                             ChooseResult, ContributeRequest,
+                             ERR_UNAUTHORIZED, ERR_UNKNOWN_JOB, AuthedRequest,
+                             ChooseRequest, ChooseResult, CompactRequest,
+                             CompactResult, ContributeRequest,
                              ContributeResult, JobInfo, ModelErrorsRequest,
                              ModelErrorsResult, PredictRequest, PredictResult,
                              Response, SearchRequest, SearchResult,
@@ -119,6 +120,24 @@ class HubGateway:
                 self._services.popitem(last=False)
         self._services.move_to_end((job, seed))
         return entry[3]
+
+    def _evict_superseded(self, job: str) -> int:
+        """Drop cached services for ``job`` keyed on a dead store state.
+
+        The per-(job, seed) LRU would otherwise strand one entry per seed
+        across a store-version discontinuity (an accepted contribution,
+        and especially an epoch transition, which no future request can
+        ever revalidate against) until cap pressure pushes them out —
+        N compactions must not grow the cache.  Returns how many entries
+        were evicted."""
+        repo = self._repo(job)
+        version = repo.store.version
+        trust_version = repo.store.trust_version
+        dead = [k for k, e in self._services.items()
+                if k[0] == job and (e[0] != version or e[1] != trust_version)]
+        for k in dead:
+            del self._services[k]
+        return len(dead)
 
     def _rows(self, repo, X, y=None) -> np.ndarray:
         """Validated [n, d] feature block for ``repo``'s schema."""
@@ -222,10 +241,46 @@ class HubGateway:
         rows = RuntimeData(repo.schema, np.asarray(req.machine_type), X,
                            np.asarray(req.y, np.float64))
         report = repo.contribute(rows, contributor=req.contributor_id)
+        self._evict_superseded(req.job)   # judged: version/trust moved
         return ContributeResult(
             bool(report.accepted), float(report.baseline_mape),
             float(report.candidate_mape), report.reason, req.contributor_id,
             len(repo.store), repo.store.version, repo.store.fingerprint)
+
+    def compact(self, req) -> Response[CompactResult]:
+        """Store lifecycle admin op: epoch transition via coverage-aware
+        reduction.  Auth-enabled gateways serve it to OPERATORS only —
+        an admitted but non-operator identity gets a typed
+        ``unauthorized`` envelope before any repo is touched."""
+        req, cid, err = self._admit(req, CompactRequest)
+        if err is not None:
+            return err
+        if self.auth is not None and not self.auth.is_operator(cid):
+            return Response.failure(
+                ERR_UNAUTHORIZED,
+                f"store compaction is operator-only: contributor {cid!r} "
+                "holds no operator standing (grant_operator)")
+        return self._respond(self._compact, req)
+
+    def _compact(self, req: CompactRequest) -> CompactResult:
+        repo = self._repo(req.job)
+        report = repo.store.compact(
+            max_rows_per_cell=int(req.max_rows_per_cell),
+            support_floor=int(req.support_floor),
+            cell_rel_width=float(req.cell_rel_width),
+            accuracy_budget=float(req.accuracy_budget),
+            min_store_rows=int(req.min_store_rows),
+            seed=self._seed(req.seed))
+        if report.accepted:
+            # the old epoch's store version is a dead key no request can
+            # revalidate: evict eagerly instead of waiting for LRU pressure
+            self._evict_superseded(req.job)
+        return CompactResult(
+            bool(report.accepted), report.code, report.reason,
+            int(report.rows_before), int(report.rows_after),
+            int(report.epoch), int(report.cells),
+            float(report.baseline_mape), float(report.candidate_mape),
+            repo.store.version, repo.store.fingerprint)
 
     def model_errors(self, req) -> Response[ModelErrorsResult]:
         req, _, err = self._admit(req, ModelErrorsRequest)
@@ -253,14 +308,18 @@ class HubGateway:
         """Per-(job, store version) cached metadata: contributor counts
         and machine lists are O(rows) scans that only change when a
         contribution is accepted — not per search request."""
-        key = (repo.store.version, tuple(repo.model_names))
+        key = (repo.store.version, repo.store.epoch,
+               tuple(repo.model_names))
         entry = self._jobinfo.get(repo.job)
         if entry is None or entry[0] != key:
             data = repo.store.data
             info = JobInfo(
                 repo.job, repo.algorithm, len(data),
-                data.present_machines(), key[1],
-                tuple(sorted(data.contributor_counts().items())))
+                data.present_machines(), key[2],
+                tuple(sorted(data.contributor_counts().items())),
+                epoch=repo.store.epoch,
+                compactions=repo.store.compactions,
+                rows_contributed=repo.store.rows_contributed)
             self._jobinfo[repo.job] = entry = (key, info)
         return entry[1]
 
@@ -324,11 +383,18 @@ class HubGateway:
     def unban_contributor(self, contributor_id: str) -> bool:
         return self._authority().unban(contributor_id)
 
+    def grant_operator(self, contributor_id: str) -> None:
+        self._authority().grant_operator(contributor_id)
+
+    def revoke_operator(self, contributor_id: str) -> bool:
+        return self._authority().revoke_operator(contributor_id)
+
     # ------------------------- uniform dispatch ---------------------------
     _HANDLERS = {
         PredictRequest: "predict", ChooseRequest: "choose",
         ContributeRequest: "contribute", ModelErrorsRequest: "model_errors",
         SearchRequest: "search", TrustStateRequest: "trust_state",
+        CompactRequest: "compact",
     }
 
     def handle(self, request) -> Response:

@@ -99,6 +99,27 @@ class TrustStateRequest:
 
 
 @dataclass(frozen=True, slots=True)
+class CompactRequest:
+    """Admin op: epoch transition via coverage-aware training-data
+    reduction of one job's store (``RuntimeDataStore.compact``).
+
+    On an auth-enabled gateway this is OPERATOR-ONLY: the wrapped
+    identity must hold operator standing with the gateway's
+    ``TrustAuthority`` — an ordinary contributor token is refused with
+    ``unauthorized``.  A compaction the store declines (support floor,
+    tiny store, accuracy budget, nothing to remove) is an ``ok`` envelope
+    whose result carries ``code="compaction_rejected"`` — a verdict, not
+    a transport failure."""
+    job: str
+    max_rows_per_cell: int = 4
+    support_floor: int = 2
+    cell_rel_width: float = 0.15
+    accuracy_budget: float = 0.01
+    min_store_rows: int = 64
+    seed: Optional[int] = None            # None = gateway's default seed
+
+
+@dataclass(frozen=True, slots=True)
 class AuthedRequest:
     """Any API v1 request wrapped with a bearer token.
 
@@ -163,6 +184,26 @@ class ContributeResult:
 
 
 @dataclass(frozen=True, slots=True)
+class CompactResult:
+    """Compaction verdict plus post-attempt store lifecycle state.
+
+    ``code`` is ``"compacted"`` or ``"compaction_rejected"``; on
+    rejection the store is untouched (``store_version``/``fingerprint``
+    still name the pre-attempt state and ``epoch`` did not advance)."""
+    accepted: bool
+    code: str
+    reason: str
+    rows_before: int
+    rows_after: int
+    epoch: int
+    cells: int
+    baseline_mape: float
+    candidate_mape: float
+    store_version: int
+    fingerprint: str
+
+
+@dataclass(frozen=True, slots=True)
 class ModelErrorsResult:
     errors: Tuple[Tuple[str, float, float], ...]   # (model, mape, mae)
     selected_model: str
@@ -177,6 +218,10 @@ class JobInfo:
     machines: Tuple[str, ...]
     models: Tuple[str, ...]
     contributors: Tuple[Tuple[str, int], ...]      # (contributor, rows)
+    # store lifecycle (defaults keep pre-epoch payloads decodable)
+    epoch: int = 0
+    compactions: int = 0
+    rows_contributed: int = 0             # lifetime ingested (never shrinks)
 
 
 @dataclass(frozen=True, slots=True)
@@ -228,7 +273,8 @@ class Response(Generic[T]):
 
 REQUEST_TYPES = (PredictRequest, ChooseRequest, ContributeRequest,
                  ModelErrorsRequest, SearchRequest, TrustStateRequest,
-                 AuthedRequest)
+                 CompactRequest, AuthedRequest)
 RESULT_TYPES = (PredictResult, ChooseResult, ContributeResult,
-                ModelErrorsResult, JobInfo, SearchResult, TrustStateResult)
+                ModelErrorsResult, JobInfo, SearchResult, TrustStateResult,
+                CompactResult)
 MESSAGE_TYPES = REQUEST_TYPES + RESULT_TYPES + (Response,)

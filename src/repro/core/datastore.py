@@ -40,6 +40,55 @@ class ValidationReport:
     reason: str = ""
 
 
+#: machine-readable compaction outcome codes (`CompactionReport.code`,
+#: carried verbatim on the gateway's `CompactResult` envelope)
+COMPACTED = "compacted"
+COMPACTION_REJECTED = "compaction_rejected"
+
+
+@dataclass
+class CompactionReport:
+    """Outcome of one ``RuntimeDataStore.compact`` attempt.
+
+    A rejected attempt is a strict no-op: no rows move, no version bump,
+    no fingerprint reseed — ``code`` says which, ``reason`` says why."""
+    accepted: bool
+    code: str                         # COMPACTED | COMPACTION_REJECTED
+    reason: str
+    rows_before: int
+    rows_after: int
+    epoch: int                        # store epoch AFTER the attempt
+    cells: int = 0                    # occupied (machine, cell, scale) cells
+    baseline_mape: float = float("nan")
+    candidate_mape: float = float("nan")
+
+    @property
+    def retained_ratio(self) -> float:
+        return self.rows_after / max(self.rows_before, 1)
+
+
+def _gap_bins(col: np.ndarray, rel_width: float) -> np.ndarray:
+    """Cluster one context feature by relative gaps between sorted values.
+
+    Consecutive unique values split into separate cells where their gap
+    exceeds ``rel_width`` RELATIVE to the larger magnitude — collaborators
+    jitter the same canonical context cell multiplicatively, so their
+    values never coincide exactly but sit within a narrow relative band
+    that this clustering collapses into one shared coverage cell.
+
+    Compaction stays idempotent under it: removing rows only widens the
+    remaining consecutive gaps, and for ``rel_width <= 1`` a widened pair
+    spanning an old split still satisfies the split criterion — cells can
+    only ever SUBDIVIDE after a compaction, never merge, so every new cell
+    is a subset of an old (already capped) one."""
+    u, inv = np.unique(col, return_inverse=True)
+    if len(u) <= 1:
+        return np.zeros(len(col), np.int64)
+    a, b = u[:-1], u[1:]
+    split = (b - a) > rel_width * np.maximum(np.abs(a), np.abs(b))
+    return np.concatenate(([0], np.cumsum(split)))[inv.reshape(-1)]
+
+
 def _waterfill(parts: Sequence[np.ndarray], cap: int) -> np.ndarray:
     """Concatenate prefix samples of ``parts`` under a total row cap.
 
@@ -83,6 +132,15 @@ class RuntimeDataStore:
         # unbounded validation would dominate ingestion at hub scale)
         self.max_validation_rows = max_validation_rows
         self._version = 0
+        # epoch lifecycle: contributions append WITHIN the current epoch
+        # (O(delta) fingerprint chain); compact() transitions to the next
+        # epoch, re-seeding the chain once.  Pre-epoch TSV stores load as
+        # epoch 0 with byte-identical fingerprints (nothing here touches
+        # the on-disk format).
+        self._epoch = 0
+        self._compactions = 0
+        self._rows_contributed = len(data)
+        self.last_compaction: Optional[CompactionReport] = None
         self.data = data          # property setter seeds the fingerprint
 
     @property
@@ -122,6 +180,36 @@ class RuntimeDataStore:
         contribution boundaries leave no trace — while ``contribute`` pays
         O(delta), not O(N), to advance it."""
         return self._hasher.hexdigest()
+
+    # ----------------------- epoch lifecycle ------------------------------
+    @property
+    def epoch(self) -> int:
+        """Compaction epoch: 0 for a freshly constructed/loaded store,
+        +1 per accepted ``compact`` transition.  Appends never change it —
+        the (version, epoch) pair distinguishes an epoch transition (both
+        moved) from a plain append (version only)."""
+        return self._epoch
+
+    @property
+    def compactions(self) -> int:
+        """Accepted compactions over this store's in-process lifetime."""
+        return self._compactions
+
+    @property
+    def rows_contributed(self) -> int:
+        """Lifetime ingest counter: seed rows plus every accepted
+        contribution's rows.  Compaction does NOT decrease it — the
+        retained/contributed ratio is the compaction frontier's x-axis."""
+        return self._rows_contributed
+
+    def restore_epoch(self, epoch: int, compactions: int = 0) -> None:
+        """Fast-forward epoch metadata recorded out-of-process (the fits
+        sidecar stamps it next to the fingerprint): a reloaded store starts
+        at epoch 0, and a sidecar whose fingerprint matched proves the TSV
+        on disk IS that later epoch's content.  Only ever moves forward."""
+        if epoch > self._epoch:
+            self._epoch = int(epoch)
+            self._compactions = max(self._compactions, int(compactions))
 
     # ----------------------- trust plane ----------------------------------
     @property
@@ -367,4 +455,268 @@ class RuntimeDataStore:
                 self._hasher.update(
                     contribution.tsv_delta_bytes(was_provenance))
             self._version += 1
+            self._rows_contributed += len(contribution)
+        return report
+
+    # ----------------------- compaction (epoch transition) ----------------
+    def _compaction_grid(self, cell_rel_width: float,
+                         data: Optional[RuntimeData] = None) -> tuple:
+        """Per-row (cell id, group id) over the coverage grid.
+
+        A CELL is one (machine, context-cell, scale-out) triple — the unit
+        the per-cell row cap applies to; a GROUP is its (machine,
+        context-cell) projection across scale-outs — the unit the support
+        floor protects.  Context cells come from ``_gap_bins`` so rows from
+        different contributors collapse into shared coverage units."""
+        data = self.data if data is None else data
+        ctx = data.context
+        parts = [data.codes.astype(np.float64)]
+        parts += [_gap_bins(ctx[:, j], cell_rel_width).astype(np.float64)
+                  for j in range(ctx.shape[1])]
+        gkey = np.column_stack(parts)
+        ckey = np.column_stack(parts + [data.scale_out.astype(np.float64)])
+        _, grp = np.unique(gkey, axis=0, return_inverse=True)
+        _, cell = np.unique(ckey, axis=0, return_inverse=True)
+        return cell.reshape(-1), grp.reshape(-1)
+
+    def _select_retained(self, cell: np.ndarray, grp: np.ndarray,
+                         max_rows_per_cell: int, support_floor: int,
+                         data: Optional[RuntimeData] = None) -> np.ndarray:
+        """Boolean keep-mask: per-cell cap, reputation-first, spread-aware.
+
+        Within each over-full cell, rows whose reputation row weight is
+        strictly above the cell's k-th largest always stay; the remaining
+        slots are filled from the weight-tied rows by greedy farthest-point
+        (k-center) selection over the cell-normalized (context, runtime)
+        space — a cell that swallowed a range of context values keeps rows
+        covering ALL of its varying dimensions (and, for exact-duplicate
+        configs, a spread of measured runtimes), not an arbitrary corner.
+        A lone slot takes the cell medoid.  Fully deterministic: distance
+        ties break on the lowest original row position (argmin/argmax).
+        After capping, any (machine, context-cell) group below ``min(group
+        size, support_floor)`` is topped back up with its best dropped
+        rows."""
+        data = self.data if data is None else data
+        n = len(cell)
+        w = self.row_weights(data)
+        w = np.ones(n) if w is None else np.round(
+            np.asarray(w, np.float64), 9)
+        feats = np.column_stack([data.context, data.runtime])
+        order = np.argsort(cell, kind="stable")
+        cs = cell[order]
+        bounds = np.r_[np.flatnonzero(np.r_[True, cs[1:] != cs[:-1]]), n]
+        k = max_rows_per_cell
+        keep = np.zeros(n, bool)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            rows = order[lo:hi]
+            if hi - lo <= k:
+                keep[rows] = True
+                continue
+            wc = w[rows]
+            thr = np.partition(wc, hi - lo - k)[hi - lo - k]  # k-th largest
+            above = wc > thr
+            keep[rows[above]] = True
+            need = k - int(above.sum())
+            if need == 0:
+                continue
+            tied = rows[wc == thr]
+            # per-cell min-max normalization; constant dims drop out
+            f = feats[tied]
+            span = f.max(axis=0) - f.min(axis=0)
+            f = (f - f.min(axis=0)) / np.where(span > 0, span, 1.0)
+            d = np.linalg.norm(f - f.mean(axis=0), axis=1)
+            if need == 1:
+                # medoid-like: the row closest to the cell centroid
+                keep[tied[int(np.argmin(d))]] = True
+                continue
+            # seed with the row farthest off-center, then repeatedly add
+            # the row farthest from everything chosen so far
+            pick = int(np.argmax(d))
+            keep[tied[pick]] = True
+            dist = np.linalg.norm(f - f[pick], axis=1)
+            for _ in range(need - 1):
+                pick = int(np.argmax(dist))
+                keep[tied[pick]] = True
+                dist = np.minimum(dist,
+                                  np.linalg.norm(f - f[pick], axis=1))
+        # support floor: top up shorted groups with their best dropped rows
+        n_grp = int(grp.max()) + 1
+        deficit = np.maximum(
+            support_floor - np.bincount(grp[keep], minlength=n_grp), 0)
+        if deficit.any():
+            prio = np.lexsort((np.arange(n), -w))
+            ordpos = np.empty(n, np.int64)
+            ordpos[prio] = np.arange(n)
+            drop = np.where(~keep)[0]
+            o3 = drop[np.lexsort((ordpos[drop], grp[drop]))]
+            gstarts = np.searchsorted(grp[o3], np.arange(n_grp))
+            grank = np.arange(len(o3)) - gstarts[grp[o3]]
+            keep[o3[grank < deficit[grp[o3]]]] = True
+        return keep
+
+    def _compaction_gate(self, keep: np.ndarray, retained: np.ndarray,
+                         accuracy_budget: float, rng,
+                         max_rows_per_cell: int, support_floor: int,
+                         cell_rel_width: float) -> tuple:
+        """Engine-backed "accuracy holds" check for a compaction candidate.
+
+        Collaborative stores are judged the way they are USED: leave one
+        contributor out (up to three, drawn without replacement under the
+        compaction seed), rerun the REDUCTION POLICY on the remaining
+        rows, refit on them twice — full vs policy-reduced — and compare
+        bucketed holdout MAPE per machine type on the held-out
+        contributor's measurements, averaged across held contributors.
+        Rerunning the selection per split matters: subtracting the held
+        contributor from the full-store selection would strip exactly the
+        coverage rows chosen near their contexts and misread coverage loss
+        as policy damage.  A stratified row split would err the other way,
+        testing same-context in-fill where losing near-duplicate
+        neighbours reads as damage even when cross-contributor
+        generalization — the serving task — is unharmed.  Provenance-free
+        stores (no known contributors) fall back to testing on the DROPPED
+        stratified-holdout rows, unseen by either side.
+
+        Returns ``(reason, baseline_mape, candidate_mape)``; ``reason`` is
+        ``None`` when every judged machine holds the budget, else the
+        typed rollback message.  The reported pair is the judged machine
+        with the worst degradation."""
+        data = self.data
+
+        def capped(idx: np.ndarray) -> np.ndarray:
+            if len(idx) <= self.max_validation_rows:
+                return idx
+            codes = data.codes[idx]
+            parts = [idx[codes == c][rng.permutation(
+                int(np.sum(codes == c)))] for c in np.unique(codes)]
+            return np.asarray(_waterfill(parts, self.max_validation_rows))
+
+        def judge(splits) -> dict:
+            per: dict = {}
+            for test_idx, base_idx, cand_idx in splits:
+                test = data.subset(np.sort(test_idx))
+                base_d = data.subset(np.sort(capped(base_idx)))
+                cand_d = data.subset(np.sort(capped(cand_idx)))
+                for m in test.present_machines():
+                    b = self._mape(base_d, test, m)
+                    c = self._mape(cand_d, test, m)
+                    if np.isnan(b) or np.isnan(c):
+                        continue      # too little data to judge this group
+                    per.setdefault(m, []).append((b, c))
+            return {m: (float(np.mean([p[0] for p in v])),
+                        float(np.mean([p[1] for p in v])))
+                    for m, v in per.items()}
+
+        splits = []
+        ids = data.contributor
+        uniq = np.unique(ids[ids != UNKNOWN_CONTRIBUTOR])
+        if len(uniq) >= 3:            # leave-one-contributor-out gate
+            held = rng.choice(uniq, size=min(3, len(uniq)), replace=False)
+            for h in held:
+                mask = ids == h
+                test_idx = np.where(mask)[0]
+                base_idx = np.where(~mask)[0]
+                if not len(test_idx) or not len(base_idx):
+                    continue
+                view = data.subset(base_idx)
+                vcell, vgrp = self._compaction_grid(cell_rel_width, view)
+                vkeep = self._select_retained(vcell, vgrp, max_rows_per_cell,
+                                              support_floor, view)
+                splits.append((test_idx, base_idx, base_idx[vkeep]))
+        per = judge(splits) if splits else {}
+        if not per:                   # provenance-free (or unjudgeable)
+            hold, rest = self._stratified_split(rng)
+            hold_eff = hold[~keep[hold]]
+            if len(hold_eff):
+                per = judge([(hold_eff, np.asarray(rest), retained)])
+        worst = (float("nan"), float("nan"))
+        for m in sorted(per):
+            b, c = per[m]
+            if c > b + accuracy_budget:
+                return (f"accuracy budget exceeded on machine {m}: "
+                        f"candidate MAPE {c:.4f} > baseline {b:.4f} + "
+                        f"budget {accuracy_budget:g} — rolled back", b, c)
+            if np.isnan(worst[0]) or c - b > worst[1] - worst[0]:
+                worst = (b, c)
+        return None, worst[0], worst[1]
+
+    def compact(self, *, max_rows_per_cell: int = 4, support_floor: int = 2,
+                cell_rel_width: float = 0.15, accuracy_budget: float = 0.01,
+                min_store_rows: int = 64,
+                seed: Optional[int] = None) -> CompactionReport:
+        """Epoch transition via coverage-aware training-data reduction.
+
+        Downsamples the store over the (machine x context-cell x scale-out)
+        grid: each occupied cell keeps at most ``max_rows_per_cell`` rows
+        (highest reputation first), each (machine, context-cell) group
+        keeps at least ``min(group size, support_floor)``.  The transition
+        is gated on an engine-backed accuracy check: the candidate reduced
+        training set must hold bucketed holdout MAPE within
+        ``accuracy_budget`` (additive, percentage points as a fraction) of
+        the pre-compaction baseline per machine type, else the attempt
+        rolls back untouched.  ``accuracy_budget=inf`` skips the gate.
+
+        Accepting re-seeds the fingerprint chain from the retained rows'
+        canonical TSV once (the data-setter path, like the provenance
+        transition) and bumps version AND epoch; a rejected attempt is a
+        strict no-op with a typed ``compaction_rejected`` code."""
+        if max_rows_per_cell < 1:
+            raise ValueError("max_rows_per_cell must be >= 1")
+        if support_floor < 0:
+            raise ValueError("support_floor must be >= 0")
+        if not 0 < cell_rel_width <= 1:
+            # > 1 would let row removal erase a cell split (see _gap_bins),
+            # breaking compaction idempotence
+            raise ValueError("cell_rel_width must be in (0, 1]")
+        n = len(self.data)
+
+        def rejected(reason: str, b: float = float("nan"),
+                     c: float = float("nan"),
+                     cells: int = 0) -> CompactionReport:
+            report = CompactionReport(False, COMPACTION_REJECTED, reason,
+                                      n, n, self._epoch, cells=cells,
+                                      baseline_mape=float(b),
+                                      candidate_mape=float(c))
+            self.last_compaction = report
+            return report
+
+        if n < max(min_store_rows, 1):
+            return rejected(
+                f"store too small to compact: {n} rows < "
+                f"min_store_rows={max(min_store_rows, 1)}")
+        cell, grp = self._compaction_grid(cell_rel_width)
+        n_cells = int(cell.max()) + 1
+        if support_floor > 0:
+            counts = np.bincount(grp)
+            short = int(np.sum(counts < support_floor))
+            if short:
+                return rejected(
+                    f"{short} (machine, context-cell) group(s) hold fewer "
+                    f"than support_floor={support_floor} rows: compacting "
+                    "would drop them below the floor")
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        keep = self._select_retained(cell, grp, max_rows_per_cell,
+                                     support_floor)
+        rows_after = int(keep.sum())
+        if rows_after >= n:
+            return rejected(
+                f"already compact at this resolution: every occupied cell "
+                f"holds <= {max_rows_per_cell} row(s), nothing to remove")
+        retained = np.where(keep)[0]      # ascending: original row order
+        base_mape = cand_mape = np.nan
+        if np.isfinite(accuracy_budget):
+            reason, base_mape, cand_mape = self._compaction_gate(
+                keep, retained, accuracy_budget, rng, max_rows_per_cell,
+                support_floor, cell_rel_width)
+            if reason is not None:
+                return rejected(reason, base_mape, cand_mape, n_cells)
+        self.data = self.data.subset(retained)   # setter re-seeds the chain
+        self._version += 1
+        self._epoch += 1
+        self._compactions += 1
+        report = CompactionReport(
+            True, COMPACTED,
+            f"compacted {n} -> {rows_after} rows over {n_cells} cells",
+            n, rows_after, self._epoch, cells=n_cells,
+            baseline_mape=float(base_mape), candidate_mape=float(cand_mape))
+        self.last_compaction = report
         return report

@@ -86,7 +86,8 @@ class JobRepo:
     # an accepted ``contribute`` changes the data, hence the fingerprint,
     # hence invalidates every persisted fit.
 
-    FITS_VERSION = 2                     # v2: entries carry trust_version
+    FITS_VERSION = 3                     # v3: payload carries store epoch
+    #                                      (v2: entries carry trust_version)
 
     @staticmethod
     def fits_path(store_path: str) -> str:
@@ -113,6 +114,8 @@ class JobRepo:
         blob = pickle.dumps({"format": self.FITS_VERSION,
                              "job": self.job,
                              "fingerprint": self.store.fingerprint,
+                             "epoch": self.store.epoch,
+                             "compactions": self.store.compactions,
                              "entries": entries})
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
@@ -144,6 +147,14 @@ class JobRepo:
             return 0
         if fmt != self.FITS_VERSION or fingerprint != self.store.fingerprint:
             return 0
+        # the TSV codec carries rows, not lifecycle state: a fresh process
+        # re-opening a compacted store starts at epoch 0.  The sidecar is
+        # written by the process that ran the compactions, so a fingerprint
+        # match also vouches for its epoch counters — fast-forward (an
+        # epoch transition is a version discontinuity appends never cause,
+        # and downstream caches key on it via store info).
+        self.store.restore_epoch(int(payload.get("epoch", 0)),
+                                 int(payload.get("compactions", 0)))
         restored = 0
         for e in entries:
             try:

@@ -183,7 +183,9 @@ def trajectory_tsv(records: Sequence[dict]) -> str:
     for r in records:
         lines.append("\t".join((
             r["weighting"], r["job"], str(r["held_out"]), str(r["step"]),
-            str(r["store_rows"]), r["machine"], r["model"],
+            str(r["store_rows"]),
+            str(r.get("rows_contributed", r["store_rows"])),
+            str(r.get("epoch", 0)), r["machine"], r["model"],
             "%.6g" % r["mape"], "%.6g" % r["mae"], r["selected"])))
     return "\n".join(lines) + "\n"
 

@@ -16,6 +16,13 @@ harness reports a SHA-256 fingerprint of the trajectory TSV — two runs of
 ``python -m repro.eval.replay --users 8 --seed 0`` produce byte-identical
 trajectories.
 
+Periodic-compaction mode (``--compact-every N``) additionally attempts a
+store epoch transition (``RuntimeDataStore.compact``, cap-escalation
+ladder) every N contributions, tracing the accuracy-vs-store-size
+frontier: trajectory rows carry both the live ``store_rows`` and the
+lifetime ``rows_contributed``/``epoch``, so compacted and append-only
+runs plot on the same x-axis.
+
 CLI:
     PYTHONPATH=src python -m repro.eval.replay --users 8 --seed 0
 """
@@ -39,8 +46,15 @@ from repro.eval.dataset import (MultiUserData, build_multi_user,
                                 user_contributor)
 from repro.workloads.spark_emul import SCHEMAS
 
-TRAJECTORY_COLUMNS = ("job", "held_out", "step", "store_rows", "machine",
+TRAJECTORY_COLUMNS = ("job", "held_out", "step", "store_rows",
+                      "rows_contributed", "epoch", "machine",
                       "model", "mape", "mae", "selected")
+
+#: cap-escalation ladder for periodic compaction: caps are tried tightest
+#: first and the first ACCEPTED compaction wins — rejections are free
+#: no-ops (no version bump, no reseed), so one config adapts per job to
+#: however much redundancy the store actually carries
+COMPACT_CAPS = (2, 3, 4, 6)
 
 #: the C3O row must strictly beat these at full store size (ISSUE/paper
 #: Table II: the optimistic BOM and a plain linear regressor are the
@@ -58,6 +72,15 @@ class ReplayConfig:
     track_models: Tuple[str, ...] = DEFAULT_MODELS + ("linreg",)
     max_cv_folds: int = 20
     max_validation_rows: int = 1024
+    # periodic store compaction (0 = off): every N accepted-or-not
+    # contributions the store attempts an epoch transition through the
+    # COMPACT_CAPS escalation ladder — the accuracy-vs-size frontier mode
+    compact_every: int = 0
+    compact_caps: Tuple[int, ...] = COMPACT_CAPS
+    compact_floor: int = 2
+    compact_width: float = 0.15
+    compact_budget: float = 0.01
+    compact_min_rows: int = 64
 
 
 @dataclass
@@ -70,6 +93,8 @@ class ReplayResult:
     wall_s: float
     contributions: int = 0
     accepted: int = 0
+    compactions_attempted: int = 0    # ladder rungs tried (incl. rejected)
+    compactions: int = 0              # epoch transitions actually taken
 
     @property
     def ok(self) -> bool:
@@ -99,7 +124,9 @@ def _checkpoint(job: str, held: int, step: int, repo: JobRepo,
                                            seed=cfg.seed)
         for model, (mape, mae) in errs.items():
             rec = {"job": job, "held_out": held, "step": step,
-                   "store_rows": store_rows, "machine": machine,
+                   "store_rows": store_rows,
+                   "rows_contributed": repo.store.rows_contributed,
+                   "epoch": repo.store.epoch, "machine": machine,
                    "model": model, "mape": mape, "mae": mae,
                    "selected": selected if model == "c3o" else ""}
             if extra:
@@ -108,17 +135,37 @@ def _checkpoint(job: str, held: int, step: int, repo: JobRepo,
     return out
 
 
+def _maybe_compact(store: RuntimeDataStore, cfg: ReplayConfig
+                   ) -> Tuple[int, int]:
+    """Run the cap-escalation ladder once: tightest cap first, first
+    accepted epoch transition wins.  Returns (rungs tried, accepted 0/1);
+    every rejected rung is a guaranteed no-op on the store."""
+    tried = 0
+    for cap in cfg.compact_caps:
+        tried += 1
+        report = store.compact(
+            max_rows_per_cell=int(cap), support_floor=cfg.compact_floor,
+            cell_rel_width=cfg.compact_width,
+            accuracy_budget=cfg.compact_budget,
+            min_store_rows=cfg.compact_min_rows, seed=cfg.seed)
+        if report.accepted:
+            return tried, 1
+    return tried, 0
+
+
 def replay_job(job: str, mu: MultiUserData, cfg: ReplayConfig
-               ) -> Tuple[List[dict], int, int]:
+               ) -> Tuple[List[dict], int, int, int, int]:
     """Leave-one-user-out replay of one job.
 
-    Returns (trajectory records, contributions attempted, accepted)."""
+    Returns (trajectory records, contributions attempted, accepted,
+    compaction rungs attempted, compactions accepted)."""
     if len(mu.users) < 2:
         raise ValueError(
             f"leave-one-user-out needs at least 2 users, got {len(mu.users)}"
             " (with 1 user there is nobody left to contribute)")
     records: List[dict] = []
     contributions = accepted = 0
+    comp_tried = comp_done = 0
     for held in mu.users:
         test = mu.per_user[held]
         chunks = []
@@ -149,8 +196,14 @@ def replay_job(job: str, mu: MultiUserData, cfg: ReplayConfig
             report = store.contribute(chunks[ci])
             contributions += 1
             accepted += bool(report.accepted)
+            # compaction runs BEFORE the checkpoint so each trajectory row
+            # scores the store state the next reader would actually see
+            if cfg.compact_every > 0 and step % cfg.compact_every == 0:
+                t, d = _maybe_compact(store, cfg)
+                comp_tried += t
+                comp_done += d
             records += _checkpoint(job, held, step, repo, test, cfg)
-    return records, contributions, accepted
+    return records, contributions, accepted, comp_tried, comp_done
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +217,9 @@ def trajectory_tsv(records: Sequence[dict]) -> str:
     for r in records:
         lines.append("\t".join((
             r["job"], str(r["held_out"]), str(r["step"]),
-            str(r["store_rows"]), r["machine"], r["model"],
+            str(r["store_rows"]),
+            str(r.get("rows_contributed", r["store_rows"])),
+            str(r.get("epoch", 0)), r["machine"], r["model"],
             "%.6g" % r["mape"], "%.6g" % r["mae"], r["selected"])))
     return "\n".join(lines) + "\n"
 
@@ -200,7 +255,12 @@ def summarize(records: Sequence[dict], cfg: ReplayConfig) -> Dict[str, dict]:
                 final.setdefault(r["model"], []).append(r["mape"])
         final_mape = {m: float(np.mean(v)) for m, v in final.items()}
         c3o = [r for r in rows if r["model"] == "c3o"]
-        sizes = np.asarray([r["store_rows"] for r in c3o], np.float64)
+        # the x-axis is LIFETIME ingested rows (== live rows while the
+        # store is append-only): under periodic compaction the live store
+        # shrinks at epoch transitions, but collaboration progress — what
+        # Fig. 5 plots — is how much data flowed in, not what was retained
+        sizes = np.asarray([r.get("rows_contributed", r["store_rows"])
+                            for r in c3o], np.float64)
         errs = np.asarray([r["mape"] for r in c3o], np.float64)
         quart = _quartile_medians(sizes, errs)
         # non-increasing across store-size quartiles, with a small noise
@@ -220,6 +280,14 @@ def summarize(records: Sequence[dict], cfg: ReplayConfig) -> Dict[str, dict]:
         for r in c3o:
             if r["step"] == last_step[r["held_out"]] and r["selected"]:
                 selected[r["selected"]] = selected.get(r["selected"], 0) + 1
+        # store-size frontier at the final checkpoint: retained / ingested
+        # (1.0 when compaction is off), and the epoch the store reached
+        fin = [r for r in c3o if r["step"] == last_step[r["held_out"]]]
+        retention = float(np.mean(
+            [r["store_rows"] / max(r.get("rows_contributed",
+                                         r["store_rows"]), 1)
+             for r in fin])) if fin else 1.0
+        final_epoch = max((r.get("epoch", 0) for r in fin), default=0)
         summary[job] = {
             "final_mape": final_mape,
             "c3o_final": final_mape["c3o"],
@@ -228,6 +296,8 @@ def summarize(records: Sequence[dict], cfg: ReplayConfig) -> Dict[str, dict]:
             "quartile_medians": quart,
             "monotone": monotone,
             "selected_counts": selected,
+            "retention": retention,
+            "final_epoch": final_epoch,
             "ok": final_mape["c3o"] < 0.10 and beats and monotone,
         }
     return summary
@@ -237,18 +307,22 @@ def run_replay(cfg: ReplayConfig) -> ReplayResult:
     t0 = time.time()
     records: List[dict] = []
     contributions = accepted = 0
+    comp_tried = comp_done = 0
     for job in cfg.jobs:
         mu = build_multi_user(job, cfg.n_users, cfg.seed)
-        recs, contribs, acc = replay_job(job, mu, cfg)
+        recs, contribs, acc, ct, cd = replay_job(job, mu, cfg)
         records += recs
         contributions += contribs
         accepted += acc
+        comp_tried += ct
+        comp_done += cd
     tsv = trajectory_tsv(records)
     return ReplayResult(
         config=cfg, records=records, tsv=tsv,
         fingerprint=hashlib.sha256(tsv.encode()).hexdigest(),
         summary=summarize(records, cfg), wall_s=time.time() - t0,
-        contributions=contributions, accepted=accepted)
+        contributions=contributions, accepted=accepted,
+        compactions_attempted=comp_tried, compactions=comp_done)
 
 
 # ---------------------------------------------------------------------------
@@ -271,19 +345,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "'linreg,gbm'; registered custom maintainer "
                          "models are valid — the c3o row is always "
                          "reported)")
+    ap.add_argument("--compact-every", type=int, default=0, metavar="N",
+                    help="attempt a store compaction (epoch transition, "
+                         "cap-escalation ladder) every N contributions; "
+                         "0 disables — the accuracy-vs-size frontier mode")
     ap.add_argument("--out", default=None,
                     help="trajectory TSV path (default: "
-                         "eval_out/replay_users<N>_seed<S>.tsv)")
+                         "eval_out/replay_users<N>_seed<S>[_compact<N>]"
+                         ".tsv)")
     args = ap.parse_args(argv)
+    if args.compact_every < 0:
+        ap.error("--compact-every must be >= 0")
     track_kw = ({} if args.track_models is None else
                 {"track_models": tuple(args.track_models.split(","))})
     cfg = ReplayConfig(jobs=tuple(args.jobs.split(",")), n_users=args.users,
                        seed=args.seed, chunks_per_user=args.chunks,
-                       **track_kw)
+                       compact_every=args.compact_every, **track_kw)
     res = run_replay(cfg)
 
+    tag = f"_compact{cfg.compact_every}" if cfg.compact_every else ""
     out = args.out or os.path.join(
-        "eval_out", f"replay_users{cfg.n_users}_seed{cfg.seed}.tsv")
+        "eval_out", f"replay_users{cfg.n_users}_seed{cfg.seed}{tag}.tsv")
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         f.write(res.tsv)
@@ -292,11 +374,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         base = " ".join(f"{m}={v:.4f}" for m, v in sorted(s["baselines"].items()))
         quart = ">".join(f"{q:.4f}" for q in s["quartile_medians"])
         sel = ",".join(f"{k}:{v}" for k, v in sorted(s["selected_counts"].items()))
+        comp = (f" retention={s['retention']:.3f} "
+                f"epoch={s['final_epoch']}" if cfg.compact_every else "")
         print(f"replay.{job} c3o_final={s['c3o_final']:.4f} {base} "
               f"beats_baselines={s['beats_baselines']} "
               f"quartile_medians={quart} monotone={s['monotone']} "
-              f"selected={sel} ok={s['ok']}")
+              f"selected={sel}{comp} ok={s['ok']}")
     print(f"replay.contributions {res.accepted}/{res.contributions} accepted")
+    if cfg.compact_every:
+        print(f"replay.compactions {res.compactions}/"
+              f"{res.compactions_attempted} ladder rungs accepted")
     print(f"replay.trajectory {out} rows={len(res.records)}")
     print(f"replay.fingerprint {res.fingerprint}")
     print(f"replay.wall_s {res.wall_s:.1f}")

@@ -13,6 +13,7 @@ except ImportError:                       # deterministic example sweeps
 
 from repro.api import codec
 from repro.api.types import (AuthedRequest, ChooseRequest, ChooseResult,
+                             CompactRequest, CompactResult,
                              ContributeRequest, ContributeResult, JobInfo,
                              ModelErrorsRequest, ModelErrorsResult,
                              PredictRequest, PredictResult, Response,
@@ -79,6 +80,22 @@ def golden_samples():
         "timeout_envelope": Response.failure(
             "timeout", "micro-batch dispatch exceeded its 0.25s deadline "
             "(3 request(s) affected)"),
+        # store lifecycle: the operator-only compact op, its accepted
+        # verdict, and a declined compaction (an ok envelope — a verdict,
+        # not a transport failure)
+        "compact_request": AuthedRequest(
+            token="b2c4" * 8,
+            request=CompactRequest("grep", max_rows_per_cell=2,
+                                   support_floor=1, cell_rel_width=0.2,
+                                   accuracy_budget=0.02, min_store_rows=32,
+                                   seed=7)),
+        "compact_response": Response.success(CompactResult(
+            True, "compacted", "compacted 10000 -> 648 rows over 162 cells",
+            10000, 648, 1, 162, 0.0096, 0.0095, 4, "cd34" * 16)),
+        "compact_response_rejected": Response.success(CompactResult(
+            False, "compaction_rejected",
+            "store too small to compact: 42 rows < min_store_rows=64",
+            42, 42, 1, 0, math.nan, math.nan, 3, "ef56" * 16)),
     }
 
 
@@ -96,6 +113,20 @@ def test_golden_sample_encodings():
             f"wire format drifted for {name}"
         back = codec.decode(golden[name])
         assert codec.encode(back) == golden[name]
+
+
+def test_pre_epoch_jobinfo_payload_decodes_with_defaults():
+    """JobInfo payloads minted before the store-lifecycle fields existed
+    (no epoch/compactions/rows_contributed keys) still decode — the new
+    fields default to the pre-epoch reading."""
+    info = JobInfo("grep", "grep", 10, ("m5.xlarge",), ("gbm",),
+                   (("alice", 10),))
+    payload = json.loads(codec.encode(info))
+    for k in ("epoch", "compactions", "rows_contributed"):
+        payload.pop(k)
+    back = codec.decode(json.dumps(payload))
+    assert (back.epoch, back.compactions, back.rows_contributed) == (0, 0, 0)
+    assert (back.job, back.rows) == ("grep", 10)
 
 
 def test_encoding_is_strict_json():

@@ -1,0 +1,290 @@
+"""Store lifecycle: epoch-based compaction. Accept/reject verdicts and
+their exact side effects (version/epoch/fingerprint), reputation-preferred
+retention, engine-backed accuracy gating with rollback, epoch restore
+through the fits sidecar, and the gateway's operator-gated compact op with
+superseded-epoch cache eviction."""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.api import (AuthedRequest, CompactRequest, HubGateway,
+                       SearchRequest, TrustAuthority)
+from repro.api.types import ERR_UNAUTHORIZED
+from repro.core.datastore import (COMPACTED, COMPACTION_REJECTED,
+                                  RuntimeDataStore)
+from repro.core.features import RuntimeData
+from repro.core.hub import Hub, JobRepo
+from repro.core.trust import ReputationLedger
+from repro.workloads import spark_emul as W
+
+SCALEOUTS = (2, 3, 4, 6, 8, 12, 16)
+PRICES = {m.name: m.price for m in W.MACHINES.values()}
+
+#: gate-free knobs — ``accuracy_budget=inf`` skips the engine entirely
+GATE_FREE = dict(max_rows_per_cell=2, support_floor=1, cell_rel_width=0.15,
+                 accuracy_budget=float("inf"), min_store_rows=1, seed=0)
+
+
+def _multi_user_store(job="sort", users=5, seed=0, trust=None):
+    """A store grown the collaborative way: user 0 seeds, the rest flow
+    through ``contribute`` with real provenance."""
+    store = RuntimeDataStore(W.generate_user_data(job, 0, seed), seed=seed,
+                             trust=trust)
+    for u in range(1, users):
+        rep = store.contribute(W.generate_user_data(job, u, seed),
+                               contributor=f"user-{u}")
+        assert rep.accepted
+    return store
+
+
+def _snapshot(store):
+    return (store.version, store.epoch, store.compactions,
+            store.fingerprint, store.data.to_tsv())
+
+
+# --------------------------------------------------------------------------
+# verdicts and their side effects (gate-free: pure numpy)
+# --------------------------------------------------------------------------
+
+def test_small_store_compaction_is_typed_rejected_noop():
+    store = RuntimeDataStore(W.generate_user_data("sort", 0, 0))
+    before = _snapshot(store)
+    report = store.compact(seed=0)        # 60 rows < default min of 64
+    assert not report.accepted
+    assert report.code == COMPACTION_REJECTED
+    assert "too small" in report.reason
+    assert report.rows_before == report.rows_after == len(store)
+    assert _snapshot(store) == before     # no bump, no reseed, no mutation
+    assert store.last_compaction is report
+
+
+def test_accepted_compaction_bumps_epoch_and_reseeds_fingerprint():
+    store = _multi_user_store()
+    n, ver = len(store), store.version
+    contributed = store.rows_contributed
+    report = store.compact(**GATE_FREE)
+    assert report.accepted and report.code == COMPACTED
+    assert report.rows_before == n and report.rows_after == len(store)
+    assert len(store) < n
+    assert (store.version, store.epoch, store.compactions) == (ver + 1, 1, 1)
+    # the reseeded chain equals a full rehash of the live TSV, and matches
+    # a store freshly opened over the retained rows (migration invariant)
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+    assert store.fingerprint == RuntimeDataStore(store.data).fingerprint
+    # lifetime ingest counter is history, not live rows: it never shrinks
+    assert store.rows_contributed == contributed > len(store)
+
+
+def test_below_support_floor_rejects_whole_compaction():
+    store = _multi_user_store()
+    before = _snapshot(store)
+    report = store.compact(**{**GATE_FREE, "support_floor": 10 ** 6})
+    assert not report.accepted and report.code == COMPACTION_REJECTED
+    assert "floor" in report.reason
+    assert _snapshot(store) == before
+
+
+def test_nothing_to_remove_is_rejected():
+    store = _multi_user_store()
+    before = _snapshot(store)
+    report = store.compact(**{**GATE_FREE, "max_rows_per_cell": 10 ** 6})
+    assert not report.accepted and report.code == COMPACTION_REJECTED
+    assert _snapshot(store) == before
+
+
+def test_compaction_knobs_are_validated():
+    store = _multi_user_store(users=2)
+    with pytest.raises(ValueError):
+        store.compact(**{**GATE_FREE, "max_rows_per_cell": 0})
+    with pytest.raises(ValueError):
+        store.compact(**{**GATE_FREE, "support_floor": -1})
+    with pytest.raises(ValueError):
+        store.compact(**{**GATE_FREE, "cell_rel_width": 0.0})
+    with pytest.raises(ValueError):
+        store.compact(**{**GATE_FREE, "cell_rel_width": 1.5})
+
+
+def test_reputation_preferred_retention():
+    """Within a cell, rows from reputable contributors outlive rows from
+    disreputable ones: the same (context, scale-out) grid contributed
+    twice compacts down to the high-reputation copy."""
+    led = ReputationLedger()
+    for _ in range(10):
+        led.record_outcome("good", True, 1.0)
+        led.record_outcome("bad", False, 0.0)
+    assert led.row_weight("bad") < led.row_weight("good")
+    d = W.generate_user_data("sort", 0, 0)
+    good = d.with_contributor("good")
+    bad = RuntimeData(d.schema, d.machine_type, d.X,
+                      d.y * 1.01).with_contributor("bad")
+    store = RuntimeDataStore(good.append(bad), trust=led)
+    report = store.compact(**{**GATE_FREE, "max_rows_per_cell": 1})
+    assert report.accepted
+    counts = store.data.contributor_counts()
+    assert counts.get("bad", 0) == 0      # every duplicate cell kept "good"
+    assert counts["good"] == len(store)
+
+
+# --------------------------------------------------------------------------
+# epoch restore through the fits sidecar
+# --------------------------------------------------------------------------
+
+def test_epoch_restored_from_fits_sidecar(tmp_path):
+    store = _multi_user_store()
+    repo = JobRepo("sort", "sort", W.SCHEMAS["sort"], store)
+    assert store.compact(**GATE_FREE).accepted
+    path = str(tmp_path / "sort.tsv.fits.pkl")
+    repo.save_fits(path)
+
+    # a fresh process re-opens the TSV: rows survive, lifecycle counters
+    # don't (the codec carries data, not epochs) — until the sidecar,
+    # whose fingerprint match vouches for them, fast-forwards the store
+    reopened = RuntimeDataStore(
+        RuntimeData.from_tsv(store.data.to_tsv(), store.data.schema))
+    assert reopened.fingerprint == store.fingerprint
+    assert (reopened.epoch, reopened.compactions) == (0, 0)
+    repo2 = JobRepo("sort", "sort", W.SCHEMAS["sort"], reopened)
+    repo2.load_fits(path)
+    assert (reopened.epoch, reopened.compactions) == (1, 1)
+
+    # a sidecar for DIFFERENT data must not fast-forward anything
+    other = RuntimeDataStore(W.generate_user_data("sort", 7, 0))
+    repo3 = JobRepo("sort", "sort", W.SCHEMAS["sort"], other)
+    assert repo3.load_fits(path) == 0
+    assert (other.epoch, other.compactions) == (0, 0)
+
+
+def test_restore_epoch_is_forward_only():
+    store = _multi_user_store(users=2)
+    store.restore_epoch(3, compactions=2)
+    assert (store.epoch, store.compactions) == (3, 2)
+    store.restore_epoch(1, compactions=9)          # stale sidecar: ignored
+    assert (store.epoch, store.compactions) == (3, 2)
+
+
+# --------------------------------------------------------------------------
+# gateway: operator-gated compact op + cache hygiene
+# --------------------------------------------------------------------------
+
+def _gateway(jobs=("sort",), users=5, auth=None):
+    hub = Hub()
+    for job in jobs:
+        store = _multi_user_store(job, users)
+        hub.publish(JobRepo(job, job, W.SCHEMAS[job], store))
+    return HubGateway(hub, PRICES, SCALEOUTS, auth=auth)
+
+
+def test_gateway_compact_parity_with_direct_store():
+    gw = _gateway()
+    shadow = _multi_user_store()
+    req = CompactRequest("sort", accuracy_budget=float("inf"),
+                         min_store_rows=1, max_rows_per_cell=2,
+                         support_floor=1, seed=0)
+    resp = gw.compact(req)
+    direct = shadow.compact(**{**GATE_FREE, "seed": gw._seed(None)})
+    assert resp.ok and resp.result.accepted
+    got = resp.result
+    assert (got.code, got.rows_before, got.rows_after, got.epoch,
+            got.cells) == (direct.code, direct.rows_before,
+                           direct.rows_after, direct.epoch, direct.cells)
+    assert got.fingerprint == shadow.fingerprint
+    # the verdict also lands in discovery metadata
+    info = gw.search(SearchRequest("sort")).result.jobs[0]
+    assert (info.rows, info.epoch, info.compactions) == (
+        got.rows_after, 1, 1)
+    assert info.rows_contributed == direct.rows_before
+
+
+def test_gateway_rejected_compaction_is_ok_envelope():
+    gw = _gateway(users=1)                # 60 rows < default min_store_rows
+    resp = gw.compact(CompactRequest("sort"))
+    assert resp.ok
+    assert not resp.result.accepted
+    assert resp.result.code == COMPACTION_REJECTED
+    assert gw.search(SearchRequest("sort")).result.jobs[0].epoch == 0
+
+
+def test_gateway_compact_is_operator_only_under_auth():
+    auth = TrustAuthority()
+    gw = _gateway(users=5, auth=auth)
+    token = gw.issue_token("carol")
+    req = AuthedRequest(token, CompactRequest(
+        "sort", accuracy_budget=float("inf"), min_store_rows=1))
+    resp = gw.compact(req)
+    assert not resp.ok and resp.error_code == ERR_UNAUTHORIZED
+    assert "operator" in resp.detail
+    assert gw.search(AuthedRequest(
+        token, SearchRequest("sort"))).result.jobs[0].epoch == 0
+
+    gw.grant_operator("carol")
+    resp = gw.compact(req)
+    assert resp.ok and resp.result.accepted and resp.result.epoch == 1
+
+    gw.revoke_operator("carol")
+    assert not gw.compact(req).ok         # standing is revocable
+
+
+@pytest.mark.slow
+def test_gateway_cache_does_not_grow_over_compactions():
+    """Regression: every epoch transition (and every accepted
+    contribution) eagerly evicts superseded service entries — N
+    compactions leave at most one live entry per job, never N."""
+    gw = _gateway(users=4)
+    repo = gw.hub.get("sort")
+    ctx = (15.0,)
+    from repro.api import ChooseRequest
+    assert gw.choose(ChooseRequest("sort", ctx)).ok
+    assert len(gw._services) == 1
+    for u in range(4, 8):
+        assert gw.handle(_contribute_req("sort", u)).ok
+        gw.compact(CompactRequest("sort", accuracy_budget=float("inf"),
+                                  min_store_rows=1, seed=0))
+        assert gw.choose(ChooseRequest("sort", ctx)).ok
+        # the live entry is pinned to the CURRENT store version: stale
+        # epochs were evicted eagerly, not left to accumulate
+        assert len(gw._services) == 1
+        (key, entry), = gw._services.items()
+        assert key[0] == "sort" and entry[0] == repo.store.version
+    assert repo.store.epoch >= 1          # the ladder actually transitioned
+
+
+def _contribute_req(job, user):
+    from repro.api import ContributeRequest
+    d = W.generate_user_data(job, user, 0)
+    return ContributeRequest(job, tuple(d.machine_type),
+                             tuple(map(tuple, d.X)), tuple(d.y),
+                             contributor_id=f"user-{user}")
+
+
+# --------------------------------------------------------------------------
+# the engine-backed accuracy gate (slow lane)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_accuracy_gate_rejects_and_rolls_back():
+    """An impossible budget forces the gate to reject: the store must
+    roll back byte-identically — no epoch, no version, no reseed."""
+    store = _multi_user_store()
+    before = _snapshot(store)
+    report = store.compact(max_rows_per_cell=2, support_floor=1,
+                           accuracy_budget=-1e9, min_store_rows=1, seed=0)
+    assert not report.accepted and report.code == COMPACTION_REJECTED
+    assert "budget" in report.reason
+    assert np.isfinite(report.baseline_mape)
+    assert np.isfinite(report.candidate_mape)
+    assert _snapshot(store) == before
+
+
+@pytest.mark.slow
+def test_accuracy_gate_accepts_redundant_store():
+    """sort's contexts collapse to a handful of clusters, so the
+    leave-one-contributor-out gate sees ~no accuracy loss and admits the
+    epoch transition at a generous budget."""
+    store = _multi_user_store()
+    report = store.compact(max_rows_per_cell=2, support_floor=1,
+                           accuracy_budget=0.05, min_store_rows=1, seed=0)
+    assert report.accepted
+    assert report.candidate_mape <= report.baseline_mape + 0.05
+    assert len(store) < report.rows_before

@@ -143,7 +143,7 @@ def test_cli_track_models_adds_custom_model_rows(tmp_path, capsys):
     capsys.readouterr()
     lines = out.read_text().strip().split("\n")
     assert lines[0].split("\t") == list(R.TRAJECTORY_COLUMNS)
-    models = {ln.split("\t")[5] for ln in lines[1:]}
+    models = {ln.split("\t")[7] for ln in lines[1:]}
     # exactly the tracked set plus the always-present c3o row; the default
     # pool's extra models (ernest/bom/ogb) are NOT tracked in this run
     assert models == {"linreg", "cli_custom", "c3o"}
@@ -179,6 +179,31 @@ def test_replay_store_carries_real_user_provenance():
         got = parts[user_contributor(u)]
         want = mu.per_user[u]
         assert sorted(got.y.tolist()) == sorted(want.y.tolist())
+
+
+@pytest.mark.slow
+def test_cli_compact_every_reruns_byte_identical(tmp_path, capsys):
+    """Periodic-compaction replay stays a determinism artifact: two runs
+    of the same ``--compact-every`` config produce byte-identical
+    trajectory TSVs, and the trajectory schema carries the lifecycle
+    columns (live rows AND lifetime ingested rows + epoch)."""
+    out_a, out_b = tmp_path / "a.tsv", tmp_path / "b.tsv"
+    args = ["--users", "2", "--jobs", "grep", "--compact-every", "2"]
+    rc_a = R.main(args + ["--out", str(out_a)])
+    capsys.readouterr()
+    rc_b = R.main(args + ["--out", str(out_b)])
+    capsys.readouterr()
+    assert rc_a == rc_b
+    assert out_a.read_bytes() == out_b.read_bytes()
+    lines = out_a.read_text().strip().split("\n")
+    header = lines[0].split("\t")
+    assert header == list(R.TRAJECTORY_COLUMNS)
+    i_rows = header.index("store_rows")
+    i_cum = header.index("rows_contributed")
+    for ln in lines[1:]:
+        f = ln.split("\t")
+        # live store can never exceed what was ever ingested
+        assert int(f[i_rows]) <= int(f[i_cum])
 
 
 # --------------------------------------------------------------------------

@@ -149,6 +149,114 @@ def test_waterfill_allocation_property(seed, cap, n_groups):
 
 
 # ---------------------------------------------------------------------------
+# store lifecycle (epoch-based compaction)
+# ---------------------------------------------------------------------------
+
+def _compact_kw(**over):
+    """Gate-free knobs: ``accuracy_budget=inf`` skips the engine-backed
+    accuracy check, so the lifecycle invariants are tested pure-numpy."""
+    kw = dict(max_rows_per_cell=2, support_floor=1, cell_rel_width=0.2,
+              accuracy_budget=float("inf"), min_store_rows=1, seed=0)
+    kw.update(over)
+    return kw
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), k=st.integers(0, 3),
+       seed=st.integers(0, 10**6))
+def test_compaction_idempotent_property(n, k, seed):
+    """compact(compact(store)) is a no-op: row removal only WIDENS the
+    gaps the context clustering splits on, so a freshly compacted store
+    re-compacts to a rejected verdict with identical rows — for ANY data
+    distribution, not just the emulated grids."""
+    d = _random_data(np.random.default_rng(seed), n, k, 1.0)
+    store = RuntimeDataStore(d, reject_ratio=1e30, reject_slack=1e30)
+    first = store.compact(**_compact_kw())
+    if not first.accepted:
+        return                     # nothing removable: trivially idempotent
+    tsv, ver, ep = store.data.to_tsv(), store.version, store.epoch
+    second = store.compact(**_compact_kw())
+    assert not second.accepted
+    assert second.code == "compaction_rejected"
+    assert store.data.to_tsv() == tsv        # byte-identical: pure no-op
+    assert store.version == ver and store.epoch == ep
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), k=st.integers(0, 3),
+       seed=st.integers(0, 10**6), cap=st.integers(1, 4))
+def test_compaction_deterministic_property(n, k, seed, cap):
+    """Two stores over the same rows compact to byte-identical retained
+    data and equal fingerprints under a fixed seed."""
+    d = _random_data(np.random.default_rng(seed), n, k, 1.0)
+    a = RuntimeDataStore(d, reject_ratio=1e30, reject_slack=1e30)
+    b = RuntimeDataStore(d, reject_ratio=1e30, reject_slack=1e30)
+    ra = a.compact(**_compact_kw(max_rows_per_cell=cap))
+    rb = b.compact(**_compact_kw(max_rows_per_cell=cap))
+    assert ra.accepted == rb.accepted and ra.code == rb.code
+    assert a.data.to_tsv() == b.data.to_tsv()
+    assert a.fingerprint == b.fingerprint
+    assert a.epoch == b.epoch
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(12, 100), k=st.integers(0, 3),
+       seed=st.integers(0, 10**6))
+def test_compaction_fingerprint_reseed_property(n, k, seed):
+    """The epoch transition reseeds the fingerprint chain: after a
+    compaction — and after further contributions chained ON TOP of the
+    reseeded state — the streaming fingerprint equals a full O(N) rehash
+    of the live TSV, and matches a store freshly built from the same
+    retained rows."""
+    rng = np.random.default_rng(seed)
+    d = _random_data(rng, n, k, 1.0)
+    cut = int(rng.integers(max(1, n - 8), n))
+    head, tail = d.subset(np.arange(cut)), d.subset(np.arange(cut, n))
+    store = RuntimeDataStore(head, reject_ratio=1e30, reject_slack=1e30)
+    store.compact(**_compact_kw())
+    assert store.fingerprint == hashlib.sha256(
+        store.data.to_tsv().encode()).hexdigest()
+    assert store.fingerprint == RuntimeDataStore(store.data).fingerprint
+    if len(tail):                  # append AFTER the epoch transition
+        assert store.contribute(tail).accepted
+        assert store.fingerprint == hashlib.sha256(
+            store.data.to_tsv().encode()).hexdigest()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), k=st.integers(0, 3),
+       seed=st.integers(0, 10**6), floor=st.integers(1, 3),
+       cap=st.integers(1, 3))
+def test_compaction_support_floor_property(n, k, seed, floor, cap):
+    """Support floors are never violated: a (machine x context-cluster)
+    group below the floor rejects the WHOLE compaction; otherwise every
+    group retains at least ``floor`` rows (top-up past the per-cell cap
+    when needed), and the store's retained rows are exactly the
+    selection's."""
+    d = _random_data(np.random.default_rng(seed), n, k, 1.0)
+    store = RuntimeDataStore(d, reject_ratio=1e30, reject_slack=1e30)
+    kw = _compact_kw(max_rows_per_cell=cap, support_floor=floor)
+    cell, grp = store._compaction_grid(kw["cell_rel_width"])
+    before = np.bincount(grp)
+    report = store.compact(**kw)
+    if (before < floor).any():
+        assert not report.accepted
+        assert len(store) == n               # untouched
+        return
+    keep = store._select_retained(cell, grp, cap, floor) \
+        if not report.accepted else None
+    if report.accepted:
+        # recompute the deterministic selection on the ORIGINAL rows and
+        # check the store retained exactly those, floor included
+        fresh = RuntimeDataStore(d)
+        keep = fresh._select_retained(cell, grp, cap, floor)
+        assert store.data.to_tsv() == \
+            d.subset(np.flatnonzero(keep)).to_tsv()
+    counts = np.bincount(grp[keep], minlength=len(before))
+    assert (counts >= np.minimum(before, floor)).all()
+
+
+# ---------------------------------------------------------------------------
 # trust plane (repro.core.trust)
 # ---------------------------------------------------------------------------
 
