@@ -17,17 +17,19 @@ from repro.api.codec import decode, encode
 from repro.api.gateway import AsyncHubGateway, HubGateway
 from repro.api.types import (API_VERSION, AuthedRequest, ChooseRequest,
                              ChooseResult, CompactRequest, CompactResult,
-                             ContributeRequest, ContributeResult, JobInfo,
+                             ContributeRequest, ContributeResult,
+                             HealthResult, JobInfo, LaneSnapshot,
                              ModelErrorsRequest, ModelErrorsResult,
                              PredictRequest, PredictResult, Response,
-                             SearchRequest, SearchResult, TrustStateRequest,
-                             TrustStateResult)
+                             SearchRequest, SearchResult, StatsResult,
+                             TrustStateRequest, TrustStateResult)
 
 __all__ = [
     "API_VERSION", "AuthedRequest", "ChooseRequest", "ChooseResult",
     "CompactRequest", "CompactResult", "ContributeRequest",
-    "ContributeResult", "JobInfo", "ModelErrorsRequest", "ModelErrorsResult",
-    "PredictRequest", "PredictResult", "Response", "SearchRequest",
-    "SearchResult", "TrustStateRequest", "TrustStateResult", "HubGateway",
+    "ContributeResult", "HealthResult", "JobInfo", "LaneSnapshot",
+    "ModelErrorsRequest", "ModelErrorsResult", "PredictRequest",
+    "PredictResult", "Response", "SearchRequest", "SearchResult",
+    "StatsResult", "TrustStateRequest", "TrustStateResult", "HubGateway",
     "AsyncHubGateway", "TrustAuthority", "decode", "encode",
 ]

@@ -204,6 +204,25 @@ class HubGateway:
         return PredictResult(tuple(float(v) for v in t), pred.selected,
                              float(pred.mu), float(pred.sigma))
 
+    def predict_batch(self, job: str, machine_type: str,
+                      seed: Optional[int], X) -> list:
+        """Batched predict entry point for the per-(job, machine) lanes:
+        one ``predictor.predict`` dispatch for a coalesced [C, d] block
+        of SINGLE-ROW requests, answered as C per-row ``Response``
+        envelopes.  Row i's envelope is byte-identical to what the
+        inline path (``predict`` with a one-row ``PredictRequest``)
+        would have returned — the models are row-independent, so
+        batching changes wall-clock, never values (parity pinned in
+        ``tests/test_edge.py``)."""
+        repo = self._repo(job)
+        pred = repo.predictor_for(self._machine(repo, machine_type),
+                                  seed=self._seed(seed))
+        t = pred.predict(np.asarray(X, np.float64))
+        selected, mu, sigma = pred.selected, float(pred.mu), float(pred.sigma)
+        return [Response.success(PredictResult((float(v),), selected, mu,
+                                               sigma))
+                for v in t]
+
     def choose(self, req) -> Response[ChooseResult]:
         req, _, err = self._admit(req, ChooseRequest)
         return err if err is not None else self._respond(self._choose, req)
@@ -431,11 +450,18 @@ class AsyncHubGateway:
     ``BatchLane``; each lane answers everything pending per tick with one
     ``choose_cluster_batch`` engine dispatch, resolving the job's CURRENT
     service each tick so accepted contributions take effect without lane
-    restarts.  Non-choose operations pass through to the sync gateway
-    (they are not dispatch-bound).
+    restarts.  Single-row ``predict`` requests ride their own lanes,
+    keyed per (job, machine type, seed, store version), so concurrent
+    predicts coalesce into one ``predictor.predict`` dispatch per tick —
+    the store version rides in the key because an accepted contribution
+    (or compaction) is a data discontinuity: post-bump requests open a
+    fresh lane and the superseded one is evicted at creation.  Multi-row
+    predicts and all other operations pass through to the sync gateway
+    (they are not single-row dispatch-bound).
 
         async with AsyncHubGateway(gateway) as agw:
             resp = await agw.choose(ChooseRequest(job="grep", ...))
+            resp = await agw.predict(PredictRequest(job="grep", ...))
     """
 
     #: bound on live lanes: the seed is client-supplied, and every lane
@@ -453,7 +479,9 @@ class AsyncHubGateway:
         # exceeds it answers ITS requests with typed ``timeout`` error
         # envelopes while the lane worker keeps serving (None = no bound)
         self.timeout_s = timeout_s
-        self._lanes: "OrderedDict[str, BatchLane]" = OrderedDict()
+        self._lanes: "OrderedDict[Tuple[str, int], BatchLane]" = OrderedDict()
+        # predict lanes, keyed (job, machine_type, seed, store_version)
+        self._predict_lanes: "OrderedDict[tuple, BatchLane]" = OrderedDict()
         # strong refs to in-flight eviction stop() tasks: the event loop
         # only holds tasks weakly, and a GC'd stop task would leak the
         # evicted lane's worker
@@ -468,12 +496,14 @@ class AsyncHubGateway:
 
     async def stop(self) -> None:
         lanes, self._lanes = self._lanes, OrderedDict()
+        plane, self._predict_lanes = self._predict_lanes, OrderedDict()
         # dropped, not retained: a request after stop() would otherwise
         # enqueue onto a lane whose worker is gone and hang forever —
         # fresh lanes are created (and started) on the next choose().
         # In-flight eviction stops are awaited too, so shutdown leaves no
         # dangling worker
         await asyncio.gather(*(lane.stop() for lane in lanes.values()),
+                             *(lane.stop() for lane in plane.values()),
                              *list(self._stopping))
 
     # ------------------------- lanes --------------------------------------
@@ -507,23 +537,100 @@ class AsyncHubGateway:
             self._lanes[key] = lane
             while len(self._lanes) > self.MAX_LANES:
                 _, old = self._lanes.popitem(last=False)   # LRU lane
-                task = asyncio.get_running_loop().create_task(old.stop())
-                self._stopping.add(task)
-                task.add_done_callback(self._stopping.discard)
+                self._stop_lane(old)
         self._lanes.move_to_end(key)
+        return lane
+
+    def _stop_lane(self, lane: BatchLane) -> None:
+        """Detach a lane's worker asynchronously (strong-ref'd so the
+        stop task cannot be GC'd mid-flight)."""
+        task = asyncio.get_running_loop().create_task(lane.stop())
+        self._stopping.add(task)
+        task.add_done_callback(self._stopping.discard)
+
+    def _predict_lane(self, job: str, machine_type: str,
+                      seed: Optional[int]) -> BatchLane:
+        # one lane per (job, machine, seed, STORE VERSION): a predict
+        # dispatch binds one fitted predictor, and the store version is
+        # exactly its invalidation key — requests racing an accepted
+        # contribution keep answering from the epoch they arrived under,
+        # while post-bump requests open a fresh lane
+        seed = self.gateway._seed(seed)
+        repo = self.gateway._repo(job)            # raises UnknownJobError
+        key = (job, machine_type, seed, repo.store.version)
+        lane = self._predict_lanes.get(key)
+        if lane is None:
+            # the machine must be known NOW: enqueue-time refusal, so a
+            # typo cannot open (and leak) a lane that can never answer
+            self.gateway._machine(repo, machine_type)   # raises ValueError
+            for k in [k for k in self._predict_lanes
+                      if k[:3] == key[:3] and k[3] != key[3]]:
+                self._stop_lane(self._predict_lanes.pop(k))  # superseded
+
+            def dispatch(X, _t_max, _job=job, _machine=machine_type,
+                         _seed=seed):
+                # t_max is the lane's deadline slot — predicts carry none
+                return self.gateway.predict_batch(_job, _machine, _seed, X)
+
+            lane = BatchLane(dispatch, width=repo.schema.n_features,
+                             max_batch=self.max_batch, tick_s=self.tick_s,
+                             timeout_s=self.timeout_s)
+            lane.start()
+            self._predict_lanes[key] = lane
+            while len(self._predict_lanes) > self.MAX_LANES:
+                _, old = self._predict_lanes.popitem(last=False)
+                self._stop_lane(old)
+        self._predict_lanes.move_to_end(key)
         return lane
 
     @property
     def lane_stats(self) -> Dict[str, ServeStats]:
-        """Stats per lane, named ``job`` for the default seed and
-        ``job#seed=N`` otherwise (display names; routing uses tuples)."""
+        """Stats per lane: choose lanes are named ``job``, predict lanes
+        ``job@machine`` — both with a ``#seed=N`` suffix off the default
+        seed (display names; routing uses tuples).  Predict lanes for
+        superseded store versions are already evicted, so one name maps
+        to one live lane."""
         out = {}
         for (job, seed), lane in self._lanes.items():
             name = job if seed == self.gateway.seed else f"{job}#seed={seed}"
             out[name] = lane.stats
+        for (job, machine, seed, _ver), lane in self._predict_lanes.items():
+            name = f"{job}@{machine}"
+            if seed != self.gateway.seed:
+                name = f"{name}#seed={seed}"
+            out[name] = lane.stats
         return out
 
     # ------------------------- request path -------------------------------
+    async def predict(self, req) -> Response[PredictResult]:
+        """Predict, micro-batched: single-row requests coalesce on their
+        (job, machine, seed, store-version) lane into ONE
+        ``predictor.predict`` dispatch per tick; multi-row requests are
+        already a batch and dispatch inline (sync path, same envelope)."""
+        req, _, err = self.gateway._admit(req, PredictRequest)
+        if err is not None:
+            return err
+        try:
+            if len(req.X) != 1:
+                # already admitted: dispatch directly, not via the sync
+                # entry point (re-admission would double-charge quota and
+                # refuse the unwrapped request on an auth-enabled gateway)
+                return self.gateway._respond(self.gateway._predict, req)
+            lane = self._predict_lane(req.job, req.machine_type, req.seed)
+            return await lane.submit(req.X[0], None)
+        except UnknownJobError as e:
+            return Response.failure(
+                ERR_UNKNOWN_JOB, f"no published repo for job {e.args[0]!r}")
+        except LaneTimeoutError as e:
+            return Response.failure(ERR_TIMEOUT, str(e))
+        except (ValueError, TypeError) as e:
+            return Response.failure(ERR_BAD_REQUEST, str(e))
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:                       # noqa: BLE001
+            return Response.failure(ERR_INTERNAL,
+                                    f"{type(e).__name__}: {e}")
+
     async def choose(self, req) -> Response[ChooseResult]:
         # admission (auth + quota) happens HERE, before the request is
         # enqueued on any lane: a rate-limited contributor never occupies
@@ -556,11 +663,14 @@ class AsyncHubGateway:
         return self.gateway.handle(request)
 
     async def handle_async(self, request) -> Response:
-        """Uniform async dispatch: choose requests ride the micro-batch
-        lanes, everything else serves inline (AuthedRequest wrappers
-        route on their inner request, like the sync ``handle``)."""
+        """Uniform async dispatch: choose and single-row predict
+        requests ride the micro-batch lanes, everything else serves
+        inline (AuthedRequest wrappers route on their inner request,
+        like the sync ``handle``)."""
         inner = request.request if isinstance(request, AuthedRequest) \
             else request
         if isinstance(inner, ChooseRequest):
             return await self.choose(request)
+        if isinstance(inner, PredictRequest):
+            return await self.predict(request)
         return self.gateway.handle(request)

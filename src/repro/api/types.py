@@ -35,6 +35,9 @@ ERR_UNAUTHORIZED = "unauthorized"
 ERR_QUOTA_EXCEEDED = "quota_exceeded"
 #: serving: the micro-batch lane's dispatch missed its per-tick deadline
 ERR_TIMEOUT = "timeout"
+#: serving edge: the front-end is draining for shutdown — in-flight
+#: requests finish, new ones are refused with this typed envelope
+ERR_SHUTTING_DOWN = "shutting_down"
 
 T = TypeVar("T")
 
@@ -230,6 +233,48 @@ class SearchResult:
 
 
 @dataclass(frozen=True, slots=True)
+class HealthResult:
+    """``GET /healthz`` on the serving edge: liveness plus what the edge
+    serves.  ``status`` is ``"ok"`` or ``"draining"`` (shutdown started;
+    new work is being refused with ``shutting_down`` envelopes)."""
+    status: str
+    api_version: str
+    jobs: Tuple[str, ...]
+
+
+@dataclass(frozen=True, slots=True)
+class LaneSnapshot:
+    """One micro-batch lane's serving counters: dispatched requests,
+    ticks, realized mean batch, and latency percentiles (milliseconds,
+    enqueue-to-answer, from the lane's bounded reservoir; NaN until the
+    lane has dispatched)."""
+    lane: str
+    requests: int
+    batches: int
+    mean_batch: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+
+
+@dataclass(frozen=True, slots=True)
+class StatsResult:
+    """``GET /stats`` on the serving edge: HTTP-level request counters
+    and latency percentiles (milliseconds, receive-to-response, bounded
+    reservoir) plus one ``LaneSnapshot`` per live micro-batch lane —
+    choose lanes are named ``job``, predict lanes ``job@machine`` (both
+    with a ``#seed=N`` suffix off the default seed)."""
+    requests: int
+    errors: int
+    in_flight: int
+    draining: bool
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    lanes: Tuple[LaneSnapshot, ...]
+
+
+@dataclass(frozen=True, slots=True)
 class TrustStateResult:
     """One contributor's trust state across the gateway.
 
@@ -276,5 +321,5 @@ REQUEST_TYPES = (PredictRequest, ChooseRequest, ContributeRequest,
                  CompactRequest, AuthedRequest)
 RESULT_TYPES = (PredictResult, ChooseResult, ContributeResult,
                 ModelErrorsResult, JobInfo, SearchResult, TrustStateResult,
-                CompactResult)
+                CompactResult, HealthResult, LaneSnapshot, StatsResult)
 MESSAGE_TYPES = REQUEST_TYPES + RESULT_TYPES + (Response,)

@@ -1,2 +1,4 @@
-"""Serving front-ends: model-serving steps (serve_step) and the async
-cluster-configuration service (config_service)."""
+"""Serving front-ends: model-serving steps (serve_step), the async
+micro-batched cluster-configuration service (config_service), the
+socket-level HTTP/ASGI edge for Hub Gateway API v1 (edge), and the
+closed-loop load generator that drives it (loadgen)."""

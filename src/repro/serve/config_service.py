@@ -24,7 +24,8 @@ from __future__ import annotations
 
 import asyncio
 import math
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -41,19 +42,86 @@ class LaneTimeoutError(Exception):
     typed ``timeout`` error envelope)."""
 
 
+class LatencyReservoir:
+    """Fixed-capacity ring buffer of latency observations (seconds).
+
+    A serving lane records one sample per dispatched request for the
+    process lifetime, so the store must stay O(capacity), never
+    O(requests): the buffer is allocated ONCE and old samples are
+    overwritten in ring order — percentiles answer over the most recent
+    ``capacity`` observations (a sliding window, which is also what an
+    operator wants from ``/stats``: current tail latency, not the cold
+    compile spikes from an hour ago)."""
+
+    __slots__ = ("capacity", "_buf", "_count")
+
+    def __init__(self, capacity: int = 4096):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self._buf = np.empty(self.capacity, np.float64)
+        self._count = 0                   # lifetime observations
+
+    def __len__(self) -> int:
+        """Live samples in the window (never exceeds ``capacity``)."""
+        return min(self._count, self.capacity)
+
+    @property
+    def total(self) -> int:
+        """Lifetime observation count (the window holds the last
+        ``capacity`` of these)."""
+        return self._count
+
+    def record(self, seconds: float) -> None:
+        self._buf[self._count % self.capacity] = seconds
+        self._count += 1
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank percentile (``p`` in [0, 100]) over the live
+        window, in seconds; NaN while empty."""
+        n = len(self)
+        if n == 0:
+            return math.nan
+        k = min(n - 1, max(0, math.ceil(p / 100.0 * n) - 1))
+        return float(np.partition(self._buf[:n], k)[k])
+
+
 @dataclass
 class ServeStats:
     """Bounded serving counters: the mean batch size is exact as
     requests-over-batches instead of an ever-growing per-batch list (a
     lane on hub traffic would otherwise leak one list entry per tick,
     forever).  ``requests`` counts DISPATCHED requests only — enqueue-
-    rejected submissions never reach a batch."""
+    rejected submissions never reach a batch.  ``latency`` is a bounded
+    ring-buffer reservoir of per-request latencies (enqueue to answer),
+    so p50/p95/p99 come from the server side without unbounded lists."""
     requests: int = 0
     batches: int = 0
+    latency: LatencyReservoir = field(default_factory=LatencyReservoir)
 
     def record_batch(self, size: int) -> None:
         self.requests += size
         self.batches += 1
+
+    def record_latency(self, seconds: float) -> None:
+        self.latency.record(float(seconds))
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank latency percentile in seconds (NaN until a
+        request has been answered)."""
+        return self.latency.percentile(p)
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
 
     @property
     def mean_batch(self) -> float:
@@ -119,7 +187,7 @@ class BatchLane:
         # fail anything still enqueued so no submit() caller hangs forever
         while True:
             try:
-                _, _, fut = self._queue.get_nowait()
+                _, _, fut, _ = self._queue.get_nowait()
             except asyncio.QueueEmpty:
                 break
             if not fut.done():
@@ -144,7 +212,8 @@ class BatchLane:
                 "requests must not poison the shared micro-batch)")
         fut = asyncio.get_running_loop().create_future()
         await self._queue.put(
-            (ctx, math.nan if t_max is None else float(t_max), fut))
+            (ctx, math.nan if t_max is None else float(t_max), fut,
+             time.monotonic()))
         return await fut
 
     # ------------------------- worker loop --------------------------------
@@ -178,7 +247,7 @@ class BatchLane:
                         contexts = np.empty((len(group), len(group[0][0])),
                                             np.float64)
                         t_max = np.empty(len(group), np.float64)
-                        for i, (ctx, tm, _) in enumerate(group):
+                        for i, (ctx, tm, _, _) in enumerate(group):
                             contexts[i] = ctx
                             t_max[i] = tm
                         results = await self._dispatch_group(contexts, t_max)
@@ -191,22 +260,27 @@ class BatchLane:
                             f"micro-batch dispatch exceeded its "
                             f"{self.timeout_s:g}s deadline "
                             f"({len(group)} request(s) affected)")
-                        for _, _, fut in group:
+                        for _, _, fut, _ in group:
                             if not fut.done():
                                 fut.set_exception(err)
                         continue
                     except Exception as e:           # fan the failure out
-                        for _, _, fut in group:
+                        for _, _, fut, _ in group:
                             if not fut.done():
                                 fut.set_exception(e)
                         continue
                     self.stats.record_batch(len(group))
-                    for (_, _, fut), result in zip(group, results):
+                    now = time.monotonic()
+                    for (_, _, fut, t0), result in zip(group, results):
+                        # per-request latency: enqueue to answer, into the
+                        # bounded reservoir (dispatched requests only,
+                        # like the request counter)
+                        self.stats.record_latency(now - t0)
                         if not fut.done():
                             fut.set_result(result)
                 batch = []
         finally:
-            for _, _, fut in batch:  # cancelled mid-batch: don't strand them
+            for _, _, fut, _ in batch:  # cancelled mid-batch: don't strand
                 if not fut.done():
                     fut.cancel()
 
@@ -270,5 +344,5 @@ class AsyncConfigService:
         return await self._lane.submit(context_row, t_max)
 
 
-__all__: List[str] = ["ServeStats", "BatchLane", "AsyncConfigService",
-                      "LaneTimeoutError"]
+__all__: List[str] = ["ServeStats", "LatencyReservoir", "BatchLane",
+                      "AsyncConfigService", "LaneTimeoutError"]

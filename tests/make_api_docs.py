@@ -1,0 +1,165 @@
+"""Regenerate ``docs/api_v1.md`` from the live API surface + the golden
+wire-format corpus.  The rendered page is CI-checked against this
+generator (``test_api_docs_are_current``), so endpoint tables, error
+codes, and payload samples can never drift from the code:
+
+    PYTHONPATH=src python tests/make_api_docs.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+DOCS_PATH = os.path.join(os.path.dirname(__file__), "..", "docs",
+                         "api_v1.md")
+
+#: golden sample shown under each op's endpoint row (request, response)
+_OP_SAMPLES = {
+    "predict": ("predict_request", "predict_response_inf_sigma"),
+    "choose": ("choose_request_nan_deadline", "choose_response"),
+    "contribute": ("contribute_request", "contribute_response"),
+    "model_errors": ("model_errors_request", "model_errors_response"),
+    "search": ("search_request", "search_response"),
+    "trust_state": ("trust_state_request", "trust_state_response"),
+    "compact": ("compact_request", "compact_response"),
+}
+
+#: error envelopes worth a worked sample on the page
+_ERROR_SAMPLES = ("error_envelope", "unauthorized_envelope",
+                  "quota_envelope", "timeout_envelope",
+                  "shutting_down_envelope")
+
+
+def _pretty(wire: str) -> str:
+    return json.dumps(json.loads(wire), indent=2, sort_keys=True)
+
+
+def render() -> str:
+    """The full markdown page, deterministically, from the live surface."""
+    from test_api_codec import GOLDEN_PATH, golden_samples
+
+    from repro.api import codec
+    from repro.api.types import API_VERSION
+    from repro.serve.edge import OPS, STATUS_FOR_ERROR
+
+    golden = {name: codec.encode(obj)
+              for name, obj in golden_samples().items()}
+    with open(GOLDEN_PATH) as f:
+        pinned = json.load(f)
+    assert golden == pinned, (
+        "goldens are stale — run PYTHONPATH=src python "
+        "tests/make_api_goldens.py first")
+
+    out = []
+    w = out.append
+    w(f"# Hub Gateway API {API_VERSION} — HTTP surface")
+    w("")
+    w("<!-- GENERATED FILE — do not edit by hand.  Regenerate with")
+    w("     PYTHONPATH=src python tests/make_api_docs.py -->")
+    w("")
+    w("The serving edge (`repro.serve.edge`) maps HTTP bodies through the")
+    w("strict-JSON codec (`repro.api.codec`) into gateway operations.")
+    w("Every request body and every response body is a codec-encoded")
+    w("envelope: requests are the typed `*Request` dataclasses tagged with")
+    w('`"__type__"`, responses are always a `Response` envelope'
+      " (`status`")
+    w('`"ok"` with a typed `result`, or `"error"` with a machine-readable')
+    w("`error_code`).  Non-finite floats travel as tagged objects")
+    w('(`{"__float__": "nan"}`), so the wire format is strict JSON.')
+    w("")
+    w("## Endpoints")
+    w("")
+    w("| Method | Path | Request envelope | Ok result |")
+    w("|--------|------|------------------|-----------|")
+    for op, req_t in OPS.items():
+        resp_name = _OP_SAMPLES[op][1]
+        result_t = json.loads(golden[resp_name])["result"]["__type__"]
+        w(f"| POST | `/v1/{op}` | `{req_t.__name__}` | `{result_t}` |")
+    w("| POST | `/v1` | any of the above (routes on `__type__`) | "
+      "per request |")
+    w("| GET | `/healthz` | — | `HealthResult` |")
+    w("| GET | `/stats` | — | `StatsResult` |")
+    w("")
+    w("Any request MAY be wrapped in an `AuthedRequest` bearer-token")
+    w("envelope; on auth-enabled gateways every operation MUST be.")
+    w("Single-row `PredictRequest`s and `ChooseRequest`s coalesce on")
+    w("per-(job, machine type) / per-job micro-batch lanes server-side;")
+    w("batching is invisible in the response bytes.")
+    w("")
+    w("## Error codes")
+    w("")
+    w("Operational failures are ALWAYS typed envelopes — the HTTP status")
+    w("is advisory for generic tooling, the envelope is the contract.")
+    w("")
+    w("| `error_code` | HTTP status |")
+    w("|--------------|-------------|")
+    for code, status in sorted(STATUS_FOR_ERROR.items()):
+        w(f"| `{code}` | {status} |")
+    w("")
+    w("Protocol-level refusals (oversized header block: 431, chunked")
+    w("transfer encoding: 400, body over the size cap: 413) answer the")
+    w("same envelope shape with `error_code` `bad_request`.")
+    w("")
+    w("## Samples")
+    w("")
+    w("Request/response pairs below are the GOLDEN wire-format corpus")
+    w("(`tests/goldens/api_v1.json`) — byte-pinned by the test suite,")
+    w("pretty-printed here for reading.")
+    for op in OPS:
+        req_name, resp_name = _OP_SAMPLES[op]
+        w("")
+        w(f"### `POST /v1/{op}`")
+        w("")
+        w("Request:")
+        w("")
+        w("```json")
+        w(_pretty(golden[req_name]))
+        w("```")
+        w("")
+        w("Response:")
+        w("")
+        w("```json")
+        w(_pretty(golden[resp_name]))
+        w("```")
+    w("")
+    w("### `GET /healthz`")
+    w("")
+    w("```json")
+    w(_pretty(golden["health_response"]))
+    w("```")
+    w("")
+    w("During a drain the edge keeps answering health with status"
+      ' `"draining"`:')
+    w("")
+    w("```json")
+    w(_pretty(golden["health_response_draining"]))
+    w("```")
+    w("")
+    w("### `GET /stats`")
+    w("")
+    w("```json")
+    w(_pretty(golden["stats_response"]))
+    w("```")
+    w("")
+    w("### Error envelopes")
+    for name in _ERROR_SAMPLES:
+        w("")
+        w("```json")
+        w(_pretty(golden[name]))
+        w("```")
+    w("")
+    return "\n".join(out)
+
+
+def main() -> None:
+    text = render()
+    os.makedirs(os.path.dirname(DOCS_PATH), exist_ok=True)
+    with open(DOCS_PATH, "w") as f:
+        f.write(text)
+    print(f"wrote {os.path.normpath(DOCS_PATH)} ({len(text)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

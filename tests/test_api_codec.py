@@ -14,11 +14,12 @@ except ImportError:                       # deterministic example sweeps
 from repro.api import codec
 from repro.api.types import (AuthedRequest, ChooseRequest, ChooseResult,
                              CompactRequest, CompactResult,
-                             ContributeRequest, ContributeResult, JobInfo,
+                             ContributeRequest, ContributeResult,
+                             HealthResult, JobInfo, LaneSnapshot,
                              ModelErrorsRequest, ModelErrorsResult,
                              PredictRequest, PredictResult, Response,
-                             SearchRequest, SearchResult, TrustStateRequest,
-                             TrustStateResult)
+                             SearchRequest, SearchResult, StatsResult,
+                             TrustStateRequest, TrustStateResult)
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
                            "api_v1.json")
@@ -96,6 +97,20 @@ def golden_samples():
             False, "compaction_rejected",
             "store too small to compact: 42 rows < min_store_rows=64",
             42, 42, 1, 0, math.nan, math.nan, 3, "ef56" * 16)),
+        # serving edge: GET /healthz and GET /stats payloads plus the
+        # typed drain refusal every API op answers mid-shutdown
+        "health_response": Response.success(HealthResult(
+            "ok", "v1", ("grep", "sort"))),
+        "health_response_draining": Response.success(HealthResult(
+            "draining", "v1", ("grep",))),
+        "stats_response": Response.success(StatsResult(
+            1024, 3, 7, False, 12.25, 48.5, 96.125,
+            (LaneSnapshot("grep", 238, 18, 13.2, 10.5, 30.25, 41.0),
+             LaneSnapshot("grep@m5.xlarge#seed=7", 89, 17, 5.2, math.nan,
+                          math.nan, math.nan)))),
+        "shutting_down_envelope": Response.failure(
+            "shutting_down", "edge is draining for shutdown; retry "
+            "against another replica"),
     }
 
 
@@ -127,6 +142,20 @@ def test_pre_epoch_jobinfo_payload_decodes_with_defaults():
     back = codec.decode(json.dumps(payload))
     assert (back.epoch, back.compactions, back.rows_contributed) == (0, 0, 0)
     assert (back.job, back.rows) == ("grep", 10)
+
+
+def test_api_docs_are_current():
+    """``docs/api_v1.md`` is generated from the live surface + goldens;
+    any drift (new op, new error code, changed sample) fails here until
+    ``PYTHONPATH=src python tests/make_api_docs.py`` is re-run."""
+    import make_api_docs
+    path = os.path.join(os.path.dirname(__file__), "..", "docs",
+                        "api_v1.md")
+    with open(path) as f:
+        current = f.read()
+    assert current == make_api_docs.render(), \
+        "docs/api_v1.md is stale — regenerate with " \
+        "PYTHONPATH=src python tests/make_api_docs.py"
 
 
 def test_encoding_is_strict_json():
@@ -220,6 +249,26 @@ def test_trust_envelope_roundtrip(cid, rep, quota, banned, job):
         request=ChooseRequest(job, (1.0, rep), t_max=quota)))
     _assert_roundtrip(Response.success(TrustStateResult(
         cid, True, banned, quota, ((job, rep, 2, 1),))))
+
+
+@settings(max_examples=30, deadline=None)
+@given(job=st.sampled_from(_JOBS), draining=st.booleans(),
+       p=st.sampled_from(_SPECIALS), requests=st.integers(0, 10**9),
+       mean_batch=st.floats(0.0, 256.0))
+def test_serving_envelope_roundtrip(job, draining, p, requests, mean_batch):
+    """Serving-edge envelopes round-trip byte-stably — including NaN
+    percentiles on never-dispatched lanes and the drain refusal."""
+    _assert_roundtrip(Response.success(HealthResult(
+        "draining" if draining else "ok", "v1", (job, "sort"))))
+    _assert_roundtrip(Response.success(StatsResult(
+        requests, 0, 3, draining, p, p, p,
+        (LaneSnapshot(job, requests, 2, mean_batch, p, p, p),
+         LaneSnapshot(f"{job}@m5.xlarge", 0, 0, 0.0, math.nan, math.nan,
+                      math.nan)))))
+    msg = Response.failure("shutting_down", f"draining; retry {job}")
+    _assert_roundtrip(msg)
+    back = codec.decode(codec.encode(msg))
+    assert not back.ok and back.error_code == "shutting_down"
 
 
 def test_unencodable_value_raises():

@@ -401,6 +401,100 @@ def test_async_unknown_job_does_not_create_a_lane(gateway):
 
 
 # --------------------------------------------------------------------------
+# predict batch lanes
+# --------------------------------------------------------------------------
+
+def test_predict_lanes_coalesce_and_match_inline_byte_for_byte(gateway):
+    """Concurrent single-row predicts coalesce onto per-(job, machine)
+    lanes, and every lane answer is BYTE-identical (codec-encoded) to the
+    inline sync path's answer for the same row — the serving edge's
+    batching must be invisible in the response bytes."""
+    from repro.api import encode
+    rng = np.random.default_rng(7)
+    reqs = [PredictRequest("grep",
+                           ["m5.xlarge", "c5.xlarge"][i % 2],
+                           ((float(rng.choice(SCALEOUTS)),
+                             float(rng.uniform(10, 20)),
+                             float(rng.choice([.002, .02, .08]))),))
+            for i in range(24)]
+
+    async def drive():
+        async with AsyncHubGateway(gateway, max_batch=64) as agw:
+            got = await asyncio.gather(*[agw.predict(q) for q in reqs])
+            return got, {j: (s.requests, s.batches)
+                         for j, s in agw.lane_stats.items()}
+
+    got, stats = asyncio.run(drive())
+    assert all(r.ok for r in got)
+    assert set(stats) == {"grep@m5.xlarge", "grep@c5.xlarge"}
+    for requests, batches in stats.values():
+        assert requests == 12
+        assert batches < 12                # concurrent arrivals coalesced
+    for req, resp in zip(reqs, got):
+        assert encode(resp) == encode(gateway.predict(req))
+
+
+def test_multi_row_predict_bypasses_the_lanes(gateway):
+    """Explicit multi-row requests answer inline (one envelope for all
+    rows); only single-row traffic rides the coalescing lanes."""
+    from repro.api import encode
+    req = PredictRequest("grep", "m5.xlarge",
+                         ((4.0, 15.0, 0.02), (8.0, 12.0, 0.08)))
+
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            resp = await agw.predict(req)
+            return resp, dict(agw.lane_stats)
+
+    resp, lanes = asyncio.run(drive())
+    assert resp.ok and len(resp.result.runtimes_s) == 2
+    assert lanes == {}                     # no lane was created
+    assert encode(resp) == encode(gateway.predict(req))
+
+
+def test_predict_lane_invalidates_on_store_version(gateway):
+    """An accepted contribution bumps the store version; the next
+    single-row predict must fit against the GROWN store (a fresh lane
+    keyed on the new version replaces the superseded one, so the stale
+    dispatch closure cannot serve pre-contribution predictions)."""
+    row = ((4.0, 15.0, 0.02),)
+    req = PredictRequest("grep", "m5.xlarge", row)
+    base = W.generate_job_data("grep")
+    sub = base.subset(np.arange(8))
+    contrib = ContributeRequest("grep", tuple(sub.machine_type),
+                                tuple(map(tuple, sub.X)), tuple(sub.y),
+                                contributor_id="lane-test")
+
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            before = await agw.predict(req)
+            accepted = await agw.handle_async(contrib)
+            assert accepted.ok and accepted.result.accepted
+            after = await agw.predict(req)
+            return before, after, list(agw.lane_stats)
+
+    before, after, lanes = asyncio.run(drive())
+    assert before.ok and after.ok
+    # superseded lane evicted: still exactly one lane for this key
+    assert lanes.count("grep@m5.xlarge") == 1
+    want = gateway.predict(req)            # sync path sees the new store
+    np.testing.assert_array_equal(after.result.runtimes_s,
+                                  want.result.runtimes_s)
+
+
+def test_predict_bad_machine_is_an_envelope_without_a_lane(gateway):
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            resp = await agw.predict(
+                PredictRequest("grep", "warp-drive", ((4.0, 15.0, 0.02),)))
+            return resp, dict(agw.lane_stats)
+
+    resp, lanes = asyncio.run(drive())
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert lanes == {}                     # typo did not leak a lane
+
+
+# --------------------------------------------------------------------------
 # provenance backward compatibility
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,381 @@
+"""Serving-edge contracts over a REAL localhost socket: typed envelopes
+on every path (health, stats, malformed bodies, oversized payloads,
+protocol refusals), byte-for-byte parity between the HTTP path and the
+in-process gateway, predict-lane survival under interleaved bad
+requests, drain-on-shutdown semantics, and the closed-loop load
+generator's determinism and reporting."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.api import (AsyncHubGateway, HubGateway, PredictRequest,
+                       Response, decode, encode)
+from repro.api.types import (ERR_BAD_REQUEST, ERR_SHUTTING_DOWN,
+                             ChooseRequest, HealthResult, StatsResult)
+from repro.core.datastore import RuntimeDataStore
+from repro.core.hub import Hub, JobRepo
+from repro.serve.edge import serve_edge
+from repro.serve.loadgen import _request, build_workload, run_loadgen
+from repro.workloads import spark_emul as W
+
+SCALEOUTS = (2, 3, 4, 6, 8, 12, 16)
+PRICES = {m.name: m.price for m in W.MACHINES.values()}
+
+CHOOSE_BODY = encode(ChooseRequest("grep", (15.0, 0.02),
+                                   t_max=400.0)).encode("ascii")
+
+
+@pytest.fixture(scope="module")
+def gw():
+    hub = Hub()
+    d = W.generate_job_data("grep")
+    hub.publish(JobRepo("grep", "grep", d.schema,
+                        RuntimeDataStore(d, seed=0)))
+    return HubGateway(hub, PRICES, SCALEOUTS)
+
+
+async def _conn(server):
+    return await asyncio.open_connection(server.host, server.port)
+
+
+def _decode(payload: bytes) -> Response:
+    resp = decode(payload.decode("utf-8"))
+    assert isinstance(resp, Response)
+    return resp
+
+
+# --------------------------------------------------------------------------
+# health / stats / happy path
+# --------------------------------------------------------------------------
+
+def test_healthz_stats_and_ops_over_one_keepalive_connection(gw):
+    async def drive():
+        app, server = await serve_edge(gw)
+        try:
+            reader, writer = await _conn(server)
+            status, payload = await _request(reader, writer, "GET",
+                                             "/healthz")
+            assert status == 200
+            health = _decode(payload)
+            assert health.ok and isinstance(health.result, HealthResult)
+            assert health.result.status == "ok"
+            assert health.result.jobs == ("grep",)
+
+            # a choose and a single-row predict on the SAME connection
+            status, payload = await _request(reader, writer, "POST",
+                                             "/v1/choose", CHOOSE_BODY)
+            assert status == 200 and _decode(payload).ok
+            body = encode(PredictRequest(
+                "grep", "m5.xlarge", ((4.0, 15.0, 0.02),))).encode("ascii")
+            status, payload = await _request(reader, writer, "POST",
+                                             "/v1/predict", body)
+            assert status == 200
+            predict = _decode(payload)
+            assert predict.ok and len(predict.result.runtimes_s) == 1
+
+            # generic /v1 routes on the envelope's __type__
+            status, payload = await _request(reader, writer, "POST", "/v1",
+                                             body)
+            assert status == 200 and _decode(payload).ok
+
+            status, payload = await _request(reader, writer, "GET",
+                                             "/stats")
+            assert status == 200
+            stats = _decode(payload)
+            assert stats.ok and isinstance(stats.result, StatsResult)
+            assert stats.result.requests >= 4
+            assert stats.result.errors == 0 and not stats.result.draining
+            assert "grep@m5.xlarge" in {ln.lane for ln in stats.result.lanes}
+            writer.close()
+        finally:
+            await server.stop()
+
+    asyncio.run(drive())
+
+
+def test_http_path_matches_inproc_gateway_byte_for_byte(gw):
+    """The acceptance criterion: the same seeded request stream answers
+    byte-identically over the socket and through the in-process
+    gateway."""
+    workload = build_workload(32, jobs=("grep",), seed=11)
+
+    async def drive():
+        app, server = await serve_edge(gw)
+        try:
+            reader, writer = await _conn(server)
+            http = []
+            for path, body in workload:
+                status, payload = await _request(reader, writer, "POST",
+                                                 path, body)
+                assert status == 200
+                http.append(payload)
+            writer.close()
+        finally:
+            await server.stop()
+        async with AsyncHubGateway(gw) as agw:
+            inproc = [await agw.handle_async(decode(body.decode()))
+                      for _, body in workload]
+        return http, inproc
+
+    http, inproc = asyncio.run(drive())
+    for got, want in zip(http, inproc):
+        assert got == encode(want).encode("ascii")
+
+
+# --------------------------------------------------------------------------
+# malformed-body hardening (satellite: typed envelopes, never raw 500s)
+# --------------------------------------------------------------------------
+
+def test_malformed_bodies_answer_typed_envelopes_and_keepalive_survives(gw):
+    cases = [
+        # (path, body, expected HTTP status, detail fragment)
+        ("/v1/choose", b'{"__type__": "ChooseReq', 400, "malformed"),
+        ("/v1/choose", b'{"__type__": "NopeRequest"}', 400, "malformed"),
+        ("/v1/choose", b"[1, 2, 3]", 400, "expects a ChooseRequest"),
+        ("/v1/choose",
+         encode(PredictRequest("grep", "m5.xlarge",
+                               ((4.0, 15.0, 0.02),))).encode(),
+         400, "expects a ChooseRequest"),
+        ("/v1", encode(Response.success(None)).encode(), 400,
+         "not an API v1 request"),
+        ("/v1/teleport", CHOOSE_BODY, 404, "unknown operation"),
+        ("/nope", CHOOSE_BODY, 404, "no such endpoint"),
+    ]
+
+    async def drive():
+        app, server = await serve_edge(gw)
+        try:
+            reader, writer = await _conn(server)
+            for path, body, want_status, fragment in cases:
+                status, payload = await _request(reader, writer, "POST",
+                                                 path, body)
+                resp = _decode(payload)
+                assert status == want_status, (path, status)
+                assert not resp.ok and resp.error_code == ERR_BAD_REQUEST
+                assert fragment in resp.detail, (path, resp.detail)
+            # wrong methods are envelopes too
+            status, payload = await _request(reader, writer, "GET",
+                                             "/v1/choose")
+            assert status == 405 and not _decode(payload).ok
+            status, payload = await _request(reader, writer, "POST",
+                                             "/healthz")
+            assert status == 405 and not _decode(payload).ok
+            # the SAME connection still serves a good request after all
+            # of the above (keep-alive framing survived every refusal)
+            status, payload = await _request(reader, writer, "POST",
+                                             "/v1/choose", CHOOSE_BODY)
+            assert status == 200 and _decode(payload).ok
+            stats = app.snapshot()
+            assert stats.errors == len(cases) + 2
+            writer.close()
+        finally:
+            await server.stop()
+
+    asyncio.run(drive())
+
+
+def test_oversized_body_answers_typed_413_within_the_cap(gw):
+    async def drive():
+        app, server = await serve_edge(gw, max_body=2048)
+        try:
+            reader, writer = await _conn(server)
+            status, payload = await _request(reader, writer, "POST",
+                                             "/v1/choose", b"x" * 4096)
+            resp = _decode(payload)
+            assert status == 413
+            assert resp.error_code == ERR_BAD_REQUEST
+            assert "2048-byte cap" in resp.detail
+            # small overshoot was drained: the connection still serves
+            status, payload = await _request(reader, writer, "POST",
+                                             "/v1/choose", CHOOSE_BODY)
+            assert status == 200 and _decode(payload).ok
+            writer.close()
+        finally:
+            await server.stop()
+
+    asyncio.run(drive())
+
+
+def test_protocol_refusals_are_typed_envelopes(gw):
+    """Below the ASGI app: chunked transfer encoding and unparseable
+    content-length are refused with codec envelopes, not dropped."""
+
+    async def raw_exchange(server, head: bytes):
+        reader, writer = await _conn(server)
+        writer.write(head)
+        await writer.drain()
+        raw = await reader.readuntil(b"\r\n\r\n")
+        status = int(raw.split(b" ", 2)[1])
+        length = 0
+        for line in raw.split(b"\r\n"):
+            if line.lower().startswith(b"content-length:"):
+                length = int(line.split(b":", 1)[1])
+        payload = await reader.readexactly(length)
+        writer.close()
+        return status, payload
+
+    async def drive():
+        app, server = await serve_edge(gw)
+        try:
+            status, payload = await raw_exchange(
+                server, b"POST /v1/choose HTTP/1.1\r\n"
+                        b"transfer-encoding: chunked\r\n\r\n")
+            assert status == 400
+            assert "chunked" in _decode(payload).detail
+            status, payload = await raw_exchange(
+                server, b"POST /v1/choose HTTP/1.1\r\n"
+                        b"content-length: banana\r\n\r\n")
+            assert status == 400
+            assert "content-length" in _decode(payload).detail
+        finally:
+            await server.stop()
+
+    asyncio.run(drive())
+
+
+def test_bad_request_interleaved_with_good_on_the_same_predict_lane(gw):
+    """A wrong-width predict row riding the same lane tick as good
+    single-row predicts fails ALONE (typed bad_request); the good ones
+    are answered and the lane keeps serving afterwards."""
+    good_body = encode(PredictRequest(
+        "grep", "m5.xlarge", ((4.0, 15.0, 0.02),))).encode("ascii")
+    bad_body = encode(PredictRequest(
+        "grep", "m5.xlarge", ((4.0, 15.0),))).encode("ascii")
+
+    async def one(server, body):
+        reader, writer = await _conn(server)
+        try:
+            return await _request(reader, writer, "POST", "/v1/predict",
+                                  body)
+        finally:
+            writer.close()
+
+    async def drive():
+        app, server = await serve_edge(gw, tick_s=0.005)
+        try:
+            results = await asyncio.gather(
+                one(server, good_body), one(server, bad_body),
+                one(server, good_body), one(server, good_body))
+            # and the lane still serves after the poisoned tick
+            late_status, late_payload = await one(server, good_body)
+            return results, (late_status, late_payload)
+        finally:
+            await server.stop()
+
+    results, (late_status, late_payload) = asyncio.run(drive())
+    statuses = sorted(s for s, _ in results)
+    assert statuses == [200, 200, 200, 400]
+    bad = [_decode(p) for s, p in results if s == 400]
+    assert bad[0].error_code == ERR_BAD_REQUEST
+    goods = [_decode(p) for s, p in results if s == 200]
+    assert all(g.ok for g in goods)
+    assert late_status == 200 and _decode(late_payload).ok
+
+
+# --------------------------------------------------------------------------
+# shutdown drain (satellite: in-flight finishes, new work refused)
+# --------------------------------------------------------------------------
+
+def test_shutdown_drains_inflight_and_refuses_new_requests(gw):
+    async def drive():
+        # a long lane tick holds the in-flight predict open across the
+        # start of the drain
+        app, server = await serve_edge(gw, tick_s=0.25)
+        body = encode(PredictRequest(
+            "grep", "m5.xlarge", ((4.0, 15.0, 0.02),))).encode("ascii")
+
+        r1, w1 = await _conn(server)       # will carry the in-flight op
+        r2, w2 = await _conn(server)       # opened BEFORE the drain
+        inflight = asyncio.ensure_future(
+            _request(r1, w1, "POST", "/v1/predict", body))
+        await asyncio.sleep(0.05)          # request accepted, tick pending
+        assert app.in_flight == 1
+        stopping = asyncio.ensure_future(server.stop())
+        await asyncio.sleep(0.02)          # draining flag is up
+        assert app.draining
+
+        # a request mid-shutdown on a live connection: typed refusal
+        status, payload = await _request(r2, w2, "POST", "/v1/predict",
+                                         body)
+        refused = _decode(payload)
+        assert status == 503
+        assert refused.error_code == ERR_SHUTTING_DOWN
+
+        # the in-flight dispatch completed with a real answer
+        status, payload = await inflight
+        assert status == 200
+        done = _decode(payload)
+        assert done.ok and len(done.result.runtimes_s) == 1
+        await stopping
+        for w in (w1, w2):
+            w.close()
+
+        # new connections are refused at the TCP layer once stopped
+        with pytest.raises(OSError):
+            await _conn(server)
+
+    asyncio.run(drive())
+
+
+def test_health_reports_draining_during_drain(gw):
+    async def drive():
+        app, server = await serve_edge(gw)
+        try:
+            reader, writer = await _conn(server)
+            app.draining = True            # simulate mid-drain
+            status, payload = await _request(reader, writer, "GET",
+                                             "/healthz")
+            health = _decode(payload)
+            assert status == 200 and health.ok
+            assert health.result.status == "draining"
+            writer.close()
+            # draining responses carry connection: close — reconnect
+            reader, writer = await _conn(server)
+            status, payload = await _request(reader, writer, "POST",
+                                             "/v1/choose", CHOOSE_BODY)
+            assert status == 503
+            assert _decode(payload).error_code == ERR_SHUTTING_DOWN
+            writer.close()
+        finally:
+            app.draining = False
+            await server.stop()
+
+    asyncio.run(drive())
+
+
+# --------------------------------------------------------------------------
+# closed-loop load generator
+# --------------------------------------------------------------------------
+
+def test_build_workload_is_seed_deterministic():
+    a = build_workload(48, jobs=("grep", "sort"), seed=5)
+    b = build_workload(48, jobs=("grep", "sort"), seed=5)
+    c = build_workload(48, jobs=("grep", "sort"), seed=6)
+    assert a == b
+    assert a != c
+    assert all(body.decode("ascii") and path.startswith("/v1/")
+               for path, body in a)
+
+
+def test_loadgen_closed_loop_reports_and_coalesces(gw):
+    async def drive():
+        app, server = await serve_edge(gw, tick_s=0.002)
+        try:
+            return await run_loadgen(server.host, server.port,
+                                     connections=8, requests=96,
+                                     jobs=("grep",), seed=2)
+        finally:
+            await server.stop()
+
+    report = asyncio.run(drive())
+    assert report.requests == 96 and report.errors == 0
+    assert report.connections == 8
+    assert report.rps > 0 and report.wall_s > 0
+    assert 0 < report.p50_ms <= report.p95_ms <= report.p99_ms
+    assert sum(report.op_counts.values()) == 96
+    assert report.server is not None       # /stats snapshot rode along
+    assert report.server.requests >= 96
+    assert report.predict_mean_batch() >= 1.0
+    d = report.to_json()
+    assert d["requests"] == 96 and "server" in d

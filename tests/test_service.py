@@ -322,6 +322,46 @@ def test_serve_stats_mean_batch_is_bounded_and_exact():
     assert not hasattr(s, "batch_sizes")      # the unbounded list is gone
 
 
+def test_latency_reservoir_bounded_memory_and_percentiles():
+    """Regression: the latency reservoir must stay fixed-size no matter
+    how many observations land in it — 100k records through a 4096-slot
+    ring keep exactly capacity values — while percentiles track the
+    sliding window (nearest-rank), not the whole history."""
+    from repro.serve.config_service import LatencyReservoir
+    r = LatencyReservoir(capacity=4096)
+    assert len(r) == 0 and np.isnan(r.percentile(50))
+    buf_id = id(r._buf)
+    for i in range(100_000):
+        r.record(float(i))
+    assert r.total == 100_000
+    assert len(r) == 4096                      # bounded, not 100k
+    assert id(r._buf) == buf_id                # no reallocation ever
+    assert r._buf.nbytes == 4096 * 8
+    # the window holds the LAST 4096 observations: 95904..99999
+    assert r.percentile(0) == 95904.0
+    assert r.percentile(100) == 99999.0
+    assert r.percentile(50) == 95904.0 + 2047  # nearest-rank median
+
+    # single observation: every percentile is that observation
+    r1 = LatencyReservoir(capacity=8)
+    r1.record(0.25)
+    assert r1.percentile(50) == r1.percentile(99) == 0.25
+
+    with pytest.raises(ValueError):
+        LatencyReservoir(capacity=0)
+
+
+def test_serve_stats_percentiles_ride_the_reservoir():
+    from repro.serve.config_service import ServeStats
+    s = ServeStats()
+    assert np.isnan(s.p50) and np.isnan(s.p99)
+    for ms in (1.0, 2.0, 3.0, 4.0, 100.0):
+        s.record_latency(ms / 1e3)
+    np.testing.assert_allclose(s.p50, 3e-3)
+    np.testing.assert_allclose(s.p99, 0.1)
+    assert s.latency.total == 5
+
+
 def test_async_frontend_stop_cancels_pending_requests():
     """stop() must not strand an in-flight choose(): anything still queued
     is cancelled, not left hanging forever."""
