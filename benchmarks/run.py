@@ -33,6 +33,11 @@ inner evaluation where meaningful; derived = headline metric).
   trust         trust plane smoke: twin-arm adversarial replay (reputation
                 weighting off vs on) + gateway token-auth overhead on the
                 predict hot path (target <= 5%)
+  transfer      cold-start cross-job transfer: nearest-donor lookup cost
+                (cold sketch vs version-keyed cache hits; flat re-sketch
+                counters are a hard gate) and borrowed-model MAPE on a
+                zero-history twin job vs the global-mean baseline (must
+                beat it; hard gate)
   table1        dataset structure vs paper Table I
   table2        MAPE local/global x 5 jobs x {ernest,gbm,bom,ogb,c3o} (§VI-C.a)
   fig5          MAPE vs training-set size (§VI-C.b)
@@ -758,6 +763,99 @@ def bench_trust(args):
          f"overhead={(authed_s / plain_s - 1) * 100:+.1f}% (target <=5%)")
 
 
+def bench_transfer(args):
+    """Cold-start cross-job transfer: borrowed accuracy + lookup cost.
+
+    ``transfer.lookup``    nearest-donor lookup on the hub's transfer
+                           index: cold (sketches every store) vs warm
+                           (unchanged store versions — pure cache hits);
+                           flat signature-build/pair-eval counters across
+                           the warm reps are a hard SystemExit gate
+    ``transfer.borrowed``  MAPE of the gateway's borrowed predictions on
+                           a zero-history twin job's full ground truth
+                           vs the global-mean no-history baseline (what a
+                           hub without transfer could answer) — borrowing
+                           must beat it (hard SystemExit gate)
+    """
+    from repro.api import HubGateway, PredictRequest
+    from repro.core.datastore import RuntimeDataStore
+    from repro.core.hub import Hub, JobRepo
+    from repro.core.transfer import TransferPolicy
+    from repro.workloads import spark_emul as W
+
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    donors = ("sgd", "kmeans", "pagerank")   # schema-compatible donor pool
+    hub = Hub()
+    stores = {}
+    for job in donors:
+        d = W.generate_job_data(job, seed=0)
+        stores[job] = RuntimeDataStore(d, seed=0)
+        hub.publish(JobRepo(job, job, d.schema, stores[job],
+                            predictor_kw={"max_cv_folds": 15}))
+    cold = W.cold_job_name("sgd")
+    hub.publish(JobRepo(cold, "sgd (cold twin)", W.cold_schema("sgd"),
+                        RuntimeDataStore(W.cold_probe("sgd", 0), seed=0)))
+    pol = TransferPolicy()
+    gw = HubGateway(hub, prices, (2, 3, 4, 6, 8, 12), transfer=pol)
+
+    # --- lookup cost: cold sketch vs version-keyed cache hits -------------
+    index = hub.transfer_index(pol)
+    t0 = time.time()
+    match = index.nearest(cold)
+    cold_us = (time.time() - t0) * 1e6
+    builds = index.stats["signature_builds"]
+    pairs = index.stats["pair_evals"]
+    reps = 200
+    t0 = time.time()
+    for _ in range(reps):
+        index.nearest(cold)
+    warm_us = (time.time() - t0) / reps * 1e6
+    _row("transfer.lookup", warm_us,
+         f"cold_us={cold_us:.0f} warm_us={warm_us:.1f} "
+         f"amortized={cold_us / max(warm_us, 1e-9):.0f}x "
+         f"source={match.source} sim={match.similarity:.3f}")
+    if index.stats["signature_builds"] != builds \
+            or index.stats["pair_evals"] != pairs:
+        raise SystemExit(
+            "transfer.lookup: repeated lookups against unchanged store "
+            "versions re-sketched "
+            f"({index.stats['signature_builds'] - builds} builds, "
+            f"{index.stats['pair_evals'] - pairs} pair evals) — the "
+            "version-keyed caches are not amortizing")
+
+    # --- borrowed accuracy vs the no-history global-mean baseline ---------
+    test = W.generate_cold_job_data("sgd", seed=0)
+    gmean = float(np.concatenate(
+        [s.data.runtime for s in stores.values()]).mean())
+    errs_b, errs_m = [], []
+    n_rows, confidence = 0, 0.0
+    t0 = time.time()
+    for machine in sorted(test.present_machines()):
+        te = test.machine_view(machine)
+        y = np.asarray(te.y, np.float64)
+        resp = gw.predict(PredictRequest(
+            cold, machine, tuple(tuple(r) for r in te.X.tolist()), seed=0))
+        if not resp.ok:
+            raise SystemExit(
+                f"transfer.borrowed: predict for {cold!r} on {machine!r} "
+                f"failed: {resp.error_code}: {resp.detail}")
+        p = np.asarray(resp.result.runtimes_s, np.float64)
+        errs_b.append(float(np.mean(np.abs(p - y) / y)))
+        errs_m.append(float(np.mean(np.abs(gmean - y) / y)))
+        n_rows += len(y)
+        confidence = resp.result.transfer_confidence
+    dt = time.time() - t0
+    mape_b, mape_m = float(np.mean(errs_b)), float(np.mean(errs_m))
+    _row("transfer.borrowed", dt / max(n_rows, 1) * 1e6,
+         f"source={match.source} confidence={confidence:.3f} "
+         f"borrowed_mape={mape_b:.4f} mean_mape={mape_m:.4f} "
+         f"rows={n_rows} (target: borrowed < mean)")
+    if mape_b >= mape_m:
+        raise SystemExit(
+            f"transfer.borrowed: borrowed MAPE {mape_b:.4f} does not beat "
+            f"the global-mean no-history baseline {mape_m:.4f}")
+
+
 def bench_table1(args):
     from repro.workloads import spark_emul as W
     t0 = time.time()
@@ -937,6 +1035,7 @@ BENCHES = {
     "compact": bench_compact,
     "eval": bench_eval,
     "trust": bench_trust,
+    "transfer": bench_transfer,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig5": bench_fig5,

@@ -23,6 +23,7 @@ from repro.api.types import (API_VERSION, AuthedRequest, ChooseRequest,
                              PredictRequest, PredictResult, Response,
                              SearchRequest, SearchResult, StatsResult,
                              TrustStateRequest, TrustStateResult)
+from repro.core.transfer import TransferPolicy
 
 __all__ = [
     "API_VERSION", "AuthedRequest", "ChooseRequest", "ChooseResult",
@@ -31,5 +32,6 @@ __all__ = [
     "ModelErrorsRequest", "ModelErrorsResult", "PredictRequest",
     "PredictResult", "Response", "SearchRequest", "SearchResult",
     "StatsResult", "TrustStateRequest", "TrustStateResult", "HubGateway",
-    "AsyncHubGateway", "TrustAuthority", "decode", "encode",
+    "AsyncHubGateway", "TrustAuthority", "TransferPolicy", "decode",
+    "encode",
 ]

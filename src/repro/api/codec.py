@@ -38,7 +38,14 @@ def _to_jsonable(v: Any) -> Any:
             raise TypeError(f"not an API v1 message type: {name}")
         out = {"__type__": name}
         for f in dataclasses.fields(v):
-            out[f.name] = _to_jsonable(getattr(v, f.name))
+            val = getattr(v, f.name)
+            # fields marked omit_default are dropped from the wire when
+            # they hold their default: new optional envelope fields can
+            # be added without changing a single existing golden byte,
+            # and decode reconstructs the default for legacy payloads
+            if f.metadata.get("omit_default") and val == f.default:
+                continue
+            out[f.name] = _to_jsonable(val)
         return out
     if isinstance(v, float):
         if math.isnan(v):

@@ -39,6 +39,7 @@ from repro.api.types import (ERR_BAD_REQUEST, ERR_INTERNAL, ERR_TIMEOUT,
                              TrustStateRequest, TrustStateResult)
 from repro.core.features import RuntimeData
 from repro.core.service import ConfigurationService
+from repro.core.transfer import TransferPolicy
 from repro.serve.config_service import BatchLane, LaneTimeoutError, ServeStats
 
 
@@ -64,9 +65,16 @@ class HubGateway:
 
     def __init__(self, hub, prices: Dict[str, float],
                  scaleouts: Sequence[int], *, confidence: float = 0.95,
-                 seed: int = 0, auth: Optional[TrustAuthority] = None):
+                 seed: int = 0, auth: Optional[TrustAuthority] = None,
+                 transfer: Optional[TransferPolicy] = None):
         self.hub = hub
         self.auth = auth
+        # cold-start cross-job transfer (Flora-style): with a policy set,
+        # predict/choose for unknown or under-supported jobs borrow the
+        # nearest published job's fitted models and stamp the envelope
+        # with transfer_source / transfer_confidence.  None (the default)
+        # keeps the pre-transfer behavior: unknown jobs are errors.
+        self.transfer = transfer
         self.prices = dict(prices)
         self.scaleouts = tuple(int(s) for s in scaleouts)
         self.confidence = confidence
@@ -152,13 +160,65 @@ class HubGateway:
                              f"{len(np.asarray(y))} runtimes")
         return X
 
-    def _machine(self, repo, machine_type: str) -> str:
+    def _machine(self, repo, machine_type: str,
+                 job: Optional[str] = None) -> str:
+        """Vocabulary check; ``job`` labels errors with the REQUESTED job
+        when ``repo`` is a transfer donor answering for it."""
         if machine_type not in repo.store.data.machines:
             raise ValueError(
-                f"job {repo.job!r} has no shared runtime data for machine "
-                f"type {machine_type!r} (known: "
-                f"{', '.join(repo.store.data.machines) or 'none'})")
+                f"job {job if job is not None else repo.job!r} has no "
+                f"shared runtime data for machine type {machine_type!r} "
+                f"(known: {', '.join(repo.store.data.machines) or 'none'})")
         return machine_type
+
+    #: fewest stored rows a machine type needs before the gateway will
+    #: fit (and serve) a predictor for it — below this, fitting either
+    #: raises (0 rows: the store vocabulary can outlive a machine's rows
+    #: across subset/compaction) or yields an uncalibratable model
+    MIN_FIT_ROWS = 2
+
+    def _support(self, repo, machine_type: str,
+                 job: Optional[str] = None) -> None:
+        """Refuse fits the data cannot support with a typed, countable
+        reason instead of letting them raise through ``_respond`` as
+        ``internal`` (regression: ``tests/test_api_gateway.py``)."""
+        rows = len(repo.store.data.machine_view(machine_type))
+        if rows < self.MIN_FIT_ROWS:
+            raise ValueError(
+                f"insufficient_data: job "
+                f"{job if job is not None else repo.job!r} has {rows} "
+                f"stored row(s) for machine type {machine_type!r} "
+                f"(needs >= {self.MIN_FIT_ROWS} to fit; store has "
+                f"{len(repo.store)} row(s) total)")
+
+    def _resolve(self, job: str, n_features: Optional[int] = None):
+        """Serving repo for ``job``: ``(repo, transfer_source, confidence)``.
+
+        Without a transfer policy this is exactly ``_repo``.  With one, an
+        unknown job — or a published job whose store is below the policy's
+        ``min_rows`` — borrows the nearest donor's repo: the returned
+        ``transfer_source``/``confidence`` are stamped on the result
+        envelope.  ``n_features`` (when the request's payload shape gives
+        one) restricts donors to schema-compatible jobs.  An unknown job
+        with no usable donor still raises ``UnknownJobError``."""
+        try:
+            repo = self._repo(job)
+        except UnknownJobError:
+            if self.transfer is None:
+                raise
+            match = self.hub.transfer_index(self.transfer).nearest(
+                job, n_features)
+            if match is None:
+                raise
+            return self._repo(match.source), match.source, match.confidence
+        if self.transfer is not None \
+                and len(repo.store) < self.transfer.min_rows:
+            match = self.hub.transfer_index(self.transfer).nearest(
+                job, repo.schema.n_features)
+            if match is not None:
+                return (self._repo(match.source), match.source,
+                        match.confidence)
+        return repo, "", 1.0
 
     # ------------------------- trust admission ----------------------------
     def _admit(self, request, expect=None):
@@ -196,13 +256,17 @@ class HubGateway:
         return self.seed if seed is None else int(seed)
 
     def _predict(self, req: PredictRequest) -> PredictResult:
-        repo = self._repo(req.job)
-        X = self._rows(repo, req.X)
-        pred = repo.predictor_for(self._machine(repo, req.machine_type),
-                                  seed=self._seed(req.seed))
+        X = np.asarray(req.X, np.float64)
+        repo, source, conf = self._resolve(
+            req.job, X.shape[1] if X.ndim == 2 else None)
+        X = self._rows(repo, X)
+        machine = self._machine(repo, req.machine_type, job=req.job)
+        self._support(repo, machine, job=req.job)
+        pred = repo.predictor_for(machine, seed=self._seed(req.seed))
         t = pred.predict(X)
         return PredictResult(tuple(float(v) for v in t), pred.selected,
-                             float(pred.mu), float(pred.sigma))
+                             float(pred.mu), float(pred.sigma),
+                             source, conf)
 
     def predict_batch(self, job: str, machine_type: str,
                       seed: Optional[int], X) -> list:
@@ -214,13 +278,16 @@ class HubGateway:
         would have returned — the models are row-independent, so
         batching changes wall-clock, never values (parity pinned in
         ``tests/test_edge.py``)."""
-        repo = self._repo(job)
-        pred = repo.predictor_for(self._machine(repo, machine_type),
-                                  seed=self._seed(seed))
-        t = pred.predict(np.asarray(X, np.float64))
+        X = np.asarray(X, np.float64)
+        repo, source, conf = self._resolve(
+            job, X.shape[1] if X.ndim == 2 else None)
+        machine = self._machine(repo, machine_type, job=job)
+        self._support(repo, machine, job=job)
+        pred = repo.predictor_for(machine, seed=self._seed(seed))
+        t = pred.predict(X)
         selected, mu, sigma = pred.selected, float(pred.mu), float(pred.sigma)
         return [Response.success(PredictResult((float(v),), selected, mu,
-                                               sigma))
+                                               sigma, source, conf))
                 for v in t]
 
     def choose(self, req) -> Response[ChooseResult]:
@@ -228,15 +295,19 @@ class HubGateway:
         return err if err is not None else self._respond(self._choose, req)
 
     def _choose(self, req: ChooseRequest) -> ChooseResult:
-        repo = self._repo(req.job)
         ctx = np.asarray(req.context, np.float64).reshape(-1)
+        repo, source, conf = self._resolve(req.job, len(ctx) + 1)
         if len(ctx) != repo.schema.n_features - 1:
             raise ValueError(
                 f"context row has width {len(ctx)}, job {repo.job!r} "
                 f"expects {repo.schema.n_features - 1}")
-        choice = self._service(req.job, req.seed).choose_cluster_batch(
-            ctx[None, :], np.asarray([req.t_max], np.float64))[0]
-        return ChooseResult.from_choice(choice)
+        # a borrowed answer runs the DONOR's configuration service (its
+        # fitted predictors over the shared grid), keyed under the donor
+        # so cold jobs share the donor's warm service state
+        choice = self._service(source or req.job, req.seed) \
+            .choose_cluster_batch(
+                ctx[None, :], np.asarray([req.t_max], np.float64))[0]
+        return ChooseResult.from_choice(choice, source, conf)
 
     def contribute(self, req) -> Response[ContributeResult]:
         req, cid, err = self._admit(req, ContributeRequest)
@@ -310,6 +381,7 @@ class HubGateway:
         repo = self._repo(req.job)
         X = self._rows(repo, req.X, req.y)
         machine = self._machine(repo, req.machine_type)
+        self._support(repo, machine)
         test = RuntimeData(repo.schema, np.full(len(X), machine), X,
                            np.asarray(req.y, np.float64))
         errs, selected = repo.model_errors(
@@ -451,8 +523,11 @@ class AsyncHubGateway:
     ``choose_cluster_batch`` engine dispatch, resolving the job's CURRENT
     service each tick so accepted contributions take effect without lane
     restarts.  Single-row ``predict`` requests ride their own lanes,
-    keyed per (job, machine type, seed, store version), so concurrent
-    predicts coalesce into one ``predictor.predict`` dispatch per tick —
+    keyed per (job, source job, machine type, seed, store version) — the
+    source job is the transfer donor when the gateway is answering a cold
+    job from borrowed models, so borrowed predictions batch correctly —
+    and concurrent predicts coalesce into one ``predictor.predict``
+    dispatch per tick;
     the store version rides in the key because an accepted contribution
     (or compaction) is a data discontinuity: post-bump requests open a
     fresh lane and the superseded one is evicted at creation.  Multi-row
@@ -507,27 +582,39 @@ class AsyncHubGateway:
                              *list(self._stopping))
 
     # ------------------------- lanes --------------------------------------
-    def _lane(self, job: str, seed: Optional[int]) -> BatchLane:
-        # one lane per (job, seed): requests with different seeds answer
-        # from different predictor states and must not share a dispatch.
-        # Keyed on the TUPLE — a job literally named "x#seed=1" must not
-        # collide with job "x" at seed 1; the formatted name is display
-        # only (lane_stats)
+    def _lane(self, job: str, seed: Optional[int],
+              n_features: Optional[int] = None) -> BatchLane:
+        # one lane per (job, SOURCE job, seed): requests with different
+        # seeds answer from different predictor states and must not share
+        # a dispatch, and a cold job borrowing a donor dispatches on the
+        # donor's service — the source rides in the key so a resolution
+        # flip (the cold job's own store crossing min_rows) opens a fresh
+        # lane instead of mislabeling batches.  Keyed on the TUPLE — a
+        # job literally named "x#seed=1" must not collide with job "x" at
+        # seed 1; the formatted name is display only (lane_stats)
         seed = self.gateway._seed(seed)
-        key = (job, seed)
+        repo, source, _ = self.gateway._resolve(job, n_features)
+        key = (job, source or job, seed)
         lane = self._lanes.get(key)
         if lane is None:
-            repo = self.gateway._repo(job)        # raises UnknownJobError
+            for k in [k for k in self._lanes
+                      if k[0] == key[0] and k[2] == key[2] and k != key]:
+                self._stop_lane(self._lanes.pop(k))   # stale resolution
 
             def dispatch(contexts, t_max, _job=job, _seed=seed):
                 # resolve the service at dispatch time: a contribution
-                # accepted between ticks rebuilds it (store-version keyed).
-                # The whole tick's envelopes are built here in one tight
-                # loop — per-request coroutines just hand the finished
-                # Response through
+                # accepted between ticks rebuilds it (store-version keyed),
+                # and the transfer resolution is re-checked so lane
+                # envelopes match the sync path byte-for-byte.  The whole
+                # tick's envelopes are built here in one tight loop —
+                # per-request coroutines just hand the finished Response
+                # through
+                _, src, conf = self.gateway._resolve(
+                    _job, contexts.shape[1] + 1)
                 choices = self.gateway._service(
-                    _job, _seed).choose_cluster_batch(contexts, t_max)
-                return [Response.success(ChooseResult.from_choice(c))
+                    src or _job, _seed).choose_cluster_batch(contexts, t_max)
+                return [Response.success(
+                            ChooseResult.from_choice(c, src, conf))
                         for c in choices]
 
             lane = BatchLane(dispatch, width=repo.schema.n_features - 1,
@@ -549,22 +636,30 @@ class AsyncHubGateway:
         task.add_done_callback(self._stopping.discard)
 
     def _predict_lane(self, job: str, machine_type: str,
-                      seed: Optional[int]) -> BatchLane:
-        # one lane per (job, machine, seed, STORE VERSION): a predict
-        # dispatch binds one fitted predictor, and the store version is
-        # exactly its invalidation key — requests racing an accepted
-        # contribution keep answering from the epoch they arrived under,
-        # while post-bump requests open a fresh lane
+                      seed: Optional[int],
+                      n_features: Optional[int] = None) -> BatchLane:
+        # one lane per (job, SOURCE job, machine, seed, STORE VERSION): a
+        # predict dispatch binds one fitted predictor, and the SERVING
+        # store's version is exactly its invalidation key — requests
+        # racing an accepted contribution keep answering from the epoch
+        # they arrived under, while post-bump requests open a fresh lane.
+        # The source job rides in the key so borrowed predictions batch
+        # on their donor's predictor and a resolution flip (cold job
+        # graduating to its own models) opens a fresh lane
         seed = self.gateway._seed(seed)
-        repo = self.gateway._repo(job)            # raises UnknownJobError
-        key = (job, machine_type, seed, repo.store.version)
+        repo, source, _ = self.gateway._resolve(job, n_features)
+        key = (job, source or job, machine_type, seed, repo.store.version)
         lane = self._predict_lanes.get(key)
         if lane is None:
-            # the machine must be known NOW: enqueue-time refusal, so a
-            # typo cannot open (and leak) a lane that can never answer
-            self.gateway._machine(repo, machine_type)   # raises ValueError
+            # the machine must be known AND fit-supported NOW:
+            # enqueue-time refusal, so a typo (or a vocabulary machine
+            # whose rows were compacted away) cannot open (and leak) a
+            # lane that can never answer
+            self.gateway._machine(repo, machine_type, job=job)
+            self.gateway._support(repo, machine_type, job=job)
             for k in [k for k in self._predict_lanes
-                      if k[:3] == key[:3] and k[3] != key[3]]:
+                      if k[0] == key[0] and k[2] == key[2]
+                      and k[3] == key[3] and k != key]:
                 self._stop_lane(self._predict_lanes.pop(k))  # superseded
 
             def dispatch(X, _t_max, _job=job, _machine=machine_type,
@@ -586,16 +681,22 @@ class AsyncHubGateway:
     @property
     def lane_stats(self) -> Dict[str, ServeStats]:
         """Stats per lane: choose lanes are named ``job``, predict lanes
-        ``job@machine`` — both with a ``#seed=N`` suffix off the default
-        seed (display names; routing uses tuples).  Predict lanes for
-        superseded store versions are already evicted, so one name maps
-        to one live lane."""
+        ``job@machine`` — both with a ``<-source`` suffix when a cold job
+        is borrowing a donor's models and a ``#seed=N`` suffix off the
+        default seed (display names; routing uses tuples).  Predict lanes
+        for superseded store versions are already evicted, so one name
+        maps to one live lane."""
         out = {}
-        for (job, seed), lane in self._lanes.items():
-            name = job if seed == self.gateway.seed else f"{job}#seed={seed}"
+        for (job, src, seed), lane in self._lanes.items():
+            name = job if src == job else f"{job}<-{src}"
+            if seed != self.gateway.seed:
+                name = f"{name}#seed={seed}"
             out[name] = lane.stats
-        for (job, machine, seed, _ver), lane in self._predict_lanes.items():
+        for (job, src, machine, seed,
+             _ver), lane in self._predict_lanes.items():
             name = f"{job}@{machine}"
+            if src != job:
+                name = f"{name}<-{src}"
             if seed != self.gateway.seed:
                 name = f"{name}#seed={seed}"
             out[name] = lane.stats
@@ -616,8 +717,11 @@ class AsyncHubGateway:
                 # entry point (re-admission would double-charge quota and
                 # refuse the unwrapped request on an auth-enabled gateway)
                 return self.gateway._respond(self.gateway._predict, req)
-            lane = self._predict_lane(req.job, req.machine_type, req.seed)
-            return await lane.submit(req.X[0], None)
+            row = req.X[0]
+            lane = self._predict_lane(
+                req.job, req.machine_type, req.seed,
+                len(row) if hasattr(row, "__len__") else None)
+            return await lane.submit(row, None)
         except UnknownJobError as e:
             return Response.failure(
                 ERR_UNKNOWN_JOB, f"no published repo for job {e.args[0]!r}")
@@ -639,10 +743,13 @@ class AsyncHubGateway:
         if err is not None:
             return err
         try:
-            lane = self._lane(req.job, req.seed)
+            ctx = req.context
+            lane = self._lane(
+                req.job, req.seed,
+                len(ctx) + 1 if hasattr(ctx, "__len__") else None)
             # submit() canonicalizes the row; the lane dispatch already
             # wrapped the answer in a Response envelope
-            return await lane.submit(req.context, req.t_max)
+            return await lane.submit(ctx, req.t_max)
         except UnknownJobError as e:
             return Response.failure(
                 ERR_UNKNOWN_JOB, f"no published repo for job {e.args[0]!r}")

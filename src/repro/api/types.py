@@ -19,7 +19,7 @@ and works identically in-process and over a wire.  Conventions:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Generic, Optional, Tuple, TypeVar
 
 API_VERSION = "v1"
@@ -148,23 +148,42 @@ class PredictResult:
     selected_model: str
     mu: float                             # CV error calibration (paper §IV-B)
     sigma: float
+    # cold-start transfer provenance: when the gateway answered from a
+    # donor job's fitted models (Flora-style cross-job transfer), which
+    # job lent them and at what discounted confidence.  Omitted from the
+    # wire for self-served answers (the overwhelmingly common case), so
+    # pre-transfer payloads and goldens are byte-identical.
+    transfer_source: str = field(default="",
+                                 metadata={"omit_default": True})
+    transfer_confidence: float = field(default=1.0,
+                                       metadata={"omit_default": True})
 
 
 @dataclass(frozen=True, slots=True)
 class ChooseResult:
-    """Wire form of ``repro.core.configurator.ClusterChoice``."""
+    """Wire form of ``repro.core.configurator.ClusterChoice``.
+
+    ``transfer_source``/``transfer_confidence`` mark answers served from
+    a donor job's models for a cold job (empty/1.0 — and absent on the
+    wire — when the job answered for itself)."""
     machine_type: str
     scale_out: int
     predicted_runtime_s: float
     runtime_bound_s: float
     cost_usd: float
     bottleneck: bool
+    transfer_source: str = field(default="",
+                                 metadata={"omit_default": True})
+    transfer_confidence: float = field(default=1.0,
+                                       metadata={"omit_default": True})
 
     @classmethod
-    def from_choice(cls, choice) -> "ChooseResult":
+    def from_choice(cls, choice, transfer_source: str = "",
+                    transfer_confidence: float = 1.0) -> "ChooseResult":
         return cls(choice.machine_type, choice.scale_out,
                    choice.predicted_runtime_s, choice.runtime_bound_s,
-                   choice.cost_usd, choice.bottleneck)
+                   choice.cost_usd, choice.bottleneck,
+                   transfer_source, transfer_confidence)
 
     def to_choice(self):
         from repro.core.configurator import ClusterChoice

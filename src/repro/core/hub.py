@@ -238,6 +238,7 @@ class Hub:
 
     def __init__(self):
         self._repos: Dict[str, JobRepo] = {}
+        self._transfer = None             # lazy shared TransferIndex
 
     def publish(self, repo: JobRepo) -> None:
         self._repos[repo.job] = repo
@@ -252,6 +253,25 @@ class Hub:
 
     def jobs(self) -> List[str]:
         return sorted(self._repos)
+
+    def transfer_index(self, policy=None):
+        """The hub's shared cross-job transfer index (lazily built).
+
+        One index per hub: its signature / pairwise-similarity caches are
+        keyed on each store's (version, epoch), so sharing it across
+        gateways is what makes repeated nearest-job lookups amortize.
+        Passing a different ``policy`` rebuilds it (the caches key on
+        store state, not policy, so a rebuild only re-prices lookups)."""
+        from repro.core.transfer import TransferIndex
+        if self._transfer is None or (
+                policy is not None and self._transfer.policy != policy):
+            self._transfer = TransferIndex(self, policy)
+        return self._transfer
+
+    def nearest_job(self, job: str, n_features: Optional[int] = None,
+                    policy=None):
+        """Nearest-job lookup for cold-start transfer (None if no donor)."""
+        return self.transfer_index(policy).nearest(job, n_features)
 
     def gateway(self, prices: Dict[str, float], scaleouts: Sequence[int],
                 **kw):

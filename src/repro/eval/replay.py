@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import hashlib
+import math
 import os
 import sys
 import time
@@ -38,12 +39,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api.types import PredictRequest
 from repro.core.datastore import RuntimeDataStore
-from repro.core.hub import JobRepo
+from repro.core.hub import Hub, JobRepo
 from repro.core.predictor import DEFAULT_MODELS
+from repro.core.transfer import TransferPolicy
 from repro.eval.dataset import (MultiUserData, build_multi_user,
                                 contribution_chunks, derived_rng,
                                 user_contributor)
+from repro.workloads import spark_emul as W
 from repro.workloads.spark_emul import SCHEMAS
 
 TRAJECTORY_COLUMNS = ("job", "held_out", "step", "store_rows",
@@ -326,6 +330,178 @@ def run_replay(cfg: ReplayConfig) -> ReplayResult:
 
 
 # ---------------------------------------------------------------------------
+# zero-history cold-start evaluation (--cold-start-job)
+# ---------------------------------------------------------------------------
+
+COLD_COLUMNS = ("job", "step", "store_rows", "source", "confidence",
+                "machine", "model", "mape", "mae")
+
+
+@dataclass(frozen=True)
+class ColdStartConfig:
+    """Zero-history transfer evaluation: per job family, a held-out cold
+    twin (``spark_emul.cold_probe`` — a few probe rows, far below the
+    transfer policy's ``min_rows``) is served by a transfer-enabled
+    gateway while the families' donor stores grow user by user, charting
+    borrowed-model error vs donor store size against the no-history
+    global-mean baseline."""
+    jobs: Tuple[str, ...] = tuple(SCHEMAS)
+    n_users: int = 6
+    seed: int = 0
+    model_names: Tuple[str, ...] = DEFAULT_MODELS
+    max_cv_folds: int = 20
+    max_validation_rows: int = 1024
+    min_rows: int = 24                # TransferPolicy.min_rows
+
+
+@dataclass
+class ColdStartResult:
+    config: ColdStartConfig
+    records: List[dict]
+    tsv: str
+    fingerprint: str
+    summary: Dict[str, dict]
+    wall_s: float
+
+    @property
+    def ok(self) -> bool:
+        """Borrowed models must beat the no-history baseline at the final
+        store size on >= 80% of the emulated families (4 of 5)."""
+        need = math.ceil(0.8 * len(self.summary))
+        return sum(bool(s["beats_mean"])
+                   for s in self.summary.values()) >= need
+
+
+def cold_tsv(records: Sequence[dict]) -> str:
+    """Canonical TSV of the cold-start records (byte-identical across
+    reruns of the same config on the same platform)."""
+    lines = ["\t".join(COLD_COLUMNS)]
+    for r in records:
+        lines.append("\t".join((
+            r["job"], str(r["step"]), str(r["store_rows"]), r["source"],
+            "%.6g" % r["confidence"], r["machine"], r["model"],
+            "%.6g" % r["mape"], "%.6g" % r["mae"])))
+    return "\n".join(lines) + "\n"
+
+
+def _cold_checkpoint(step: int, gw, stores: Dict[str, RuntimeDataStore],
+                     tests: Dict[str, object],
+                     cfg: ColdStartConfig) -> List[dict]:
+    """Score every cold twin's full ground-truth dataset through the
+    transfer-enabled gateway at the current donor store sizes.
+
+    Two models per (family, machine): ``borrowed`` — the gateway's
+    cold-start answer, stamped with its transfer source/confidence — and
+    ``mean`` — the no-history baseline that predicts the global mean
+    runtime pooled over every donor store (what a hub with no transfer
+    and no job history could do)."""
+    out = []
+    pooled = np.concatenate([s.data.runtime for s in stores.values()])
+    gmean = float(pooled.mean())
+    for job in cfg.jobs:
+        test = tests[job]
+        cold_name = W.cold_job_name(job)
+        rows = len(stores[job])
+        for machine in sorted(test.present_machines()):
+            te = test.machine_view(machine)
+            y = np.asarray(te.y, np.float64)
+            resp = gw.predict(PredictRequest(
+                cold_name, machine,
+                tuple(tuple(r) for r in te.X.tolist()), seed=cfg.seed))
+            if not resp.ok:
+                raise RuntimeError(
+                    f"cold-start predict failed for {cold_name!r} on "
+                    f"{machine!r}: {resp.error_code}: {resp.detail}")
+            pred = np.asarray(resp.result.runtimes_s, np.float64)
+            for model, p, src, conf in (
+                    ("borrowed", pred, resp.result.transfer_source,
+                     resp.result.transfer_confidence),
+                    ("mean", np.full_like(y, gmean), "", 1.0)):
+                out.append({
+                    "job": job, "step": step, "store_rows": rows,
+                    "source": src, "confidence": float(conf),
+                    "machine": machine, "model": model,
+                    "mape": float(np.mean(np.abs(p - y) / y)),
+                    "mae": float(np.mean(np.abs(p - y)))})
+    return out
+
+
+def summarize_cold(records: Sequence[dict],
+                   cfg: ColdStartConfig) -> Dict[str, dict]:
+    """Per-family rollup: final borrowed vs baseline MAPE, the donors the
+    lookup actually picked, and whether growing donor stores helped."""
+    summary: Dict[str, dict] = {}
+    for job in cfg.jobs:
+        rows = [r for r in records if r["job"] == job]
+        if not rows:
+            continue
+        last = max(r["step"] for r in rows)
+        fin_b = [r["mape"] for r in rows
+                 if r["step"] == last and r["model"] == "borrowed"]
+        fin_m = [r["mape"] for r in rows
+                 if r["step"] == last and r["model"] == "mean"]
+        first_b = [r["mape"] for r in rows
+                   if r["step"] == 0 and r["model"] == "borrowed"]
+        summary[job] = {
+            "borrowed_final": float(np.mean(fin_b)),
+            "borrowed_first": float(np.mean(first_b)),
+            "mean_final": float(np.mean(fin_m)),
+            "beats_mean": bool(np.mean(fin_b) < np.mean(fin_m)),
+            "sources": sorted({r["source"] for r in rows
+                               if r["model"] == "borrowed"}),
+            "confidence_final": float(np.mean(
+                [r["confidence"] for r in rows
+                 if r["step"] == last and r["model"] == "borrowed"])),
+        }
+    return summary
+
+
+def run_cold_start(cfg: ColdStartConfig) -> ColdStartResult:
+    """The zero-history evaluation loop (see ``ColdStartConfig``)."""
+    t0 = time.time()
+    hub = Hub()
+    stores: Dict[str, RuntimeDataStore] = {}
+    tests: Dict[str, object] = {}
+    mus: Dict[str, MultiUserData] = {}
+    repo_kw = dict(model_names=list(cfg.model_names),
+                   predictor_kw={"pad_rows": True,
+                                 "max_cv_folds": cfg.max_cv_folds})
+    for job in cfg.jobs:
+        mus[job] = build_multi_user(job, cfg.n_users, cfg.seed)
+        first = mus[job].users[0]
+        store = RuntimeDataStore(
+            mus[job].per_user[first].with_contributor(
+                user_contributor(first)),
+            seed=cfg.seed, model_names=list(cfg.model_names),
+            max_validation_rows=cfg.max_validation_rows)
+        stores[job] = store
+        hub.publish(JobRepo(job, job, SCHEMAS[job], store, **repo_kw))
+        # the cold twin: published with only its probe rows (below
+        # min_rows, so the gateway will borrow), tested on its full
+        # ground-truth dataset (which a real hub never has)
+        hub.publish(JobRepo(
+            W.cold_job_name(job), f"{job} (cold twin)", W.cold_schema(job),
+            RuntimeDataStore(W.cold_probe(job, cfg.seed), seed=cfg.seed,
+                             model_names=list(cfg.model_names)), **repo_kw))
+        tests[job] = W.generate_cold_job_data(job, cfg.seed)
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    gw = hub.gateway(prices, (2, 3, 4, 6, 8, 12), seed=cfg.seed,
+                     transfer=TransferPolicy(min_rows=cfg.min_rows))
+    records = _cold_checkpoint(0, gw, stores, tests, cfg)
+    for step, pos in enumerate(range(1, cfg.n_users), start=1):
+        for job in cfg.jobs:
+            u = mus[job].users[pos]
+            stores[job].contribute(mus[job].per_user[u].with_contributor(
+                user_contributor(u)))
+        records += _cold_checkpoint(step, gw, stores, tests, cfg)
+    tsv = cold_tsv(records)
+    return ColdStartResult(
+        config=cfg, records=records, tsv=tsv,
+        fingerprint=hashlib.sha256(tsv.encode()).hexdigest(),
+        summary=summarize_cold(records, cfg), wall_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -349,6 +525,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="attempt a store compaction (epoch transition, "
                          "cap-escalation ladder) every N contributions; "
                          "0 disables — the accuracy-vs-size frontier mode")
+    ap.add_argument("--cold-start-job", default=None, metavar="JOB",
+                    help="zero-history transfer evaluation: emulate a "
+                         "held-out cold twin of JOB ('all' = every job) "
+                         "served by a transfer-enabled gateway, charting "
+                         "borrowed-model error vs donor store size "
+                         "against the global-mean baseline (replay flags "
+                         "other than --users/--seed/--out are ignored)")
     ap.add_argument("--out", default=None,
                     help="trajectory TSV path (default: "
                          "eval_out/replay_users<N>_seed<S>[_compact<N>]"
@@ -356,6 +539,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
     if args.compact_every < 0:
         ap.error("--compact-every must be >= 0")
+    if args.cold_start_job is not None:
+        return _main_cold_start(ap, args)
     track_kw = ({} if args.track_models is None else
                 {"track_models": tuple(args.track_models.split(","))})
     cfg = ReplayConfig(jobs=tuple(args.jobs.split(",")), n_users=args.users,
@@ -388,6 +573,36 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     print(f"replay.fingerprint {res.fingerprint}")
     print(f"replay.wall_s {res.wall_s:.1f}")
     print(f"replay.ok {res.ok}")
+    return 0 if res.ok else 1
+
+
+def _main_cold_start(ap, args) -> int:
+    """--cold-start-job branch of the CLI."""
+    jobs = tuple(SCHEMAS) if args.cold_start_job == "all" \
+        else tuple(args.cold_start_job.split(","))
+    unknown = [j for j in jobs if j not in SCHEMAS]
+    if unknown:
+        ap.error(f"--cold-start-job names unknown job(s) "
+                 f"{', '.join(unknown)} (known: {', '.join(SCHEMAS)} "
+                 "or 'all')")
+    cfg = ColdStartConfig(jobs=jobs, n_users=args.users, seed=args.seed)
+    res = run_cold_start(cfg)
+    out = args.out or os.path.join(
+        "eval_out", f"coldstart_users{cfg.n_users}_seed{cfg.seed}.tsv")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        f.write(res.tsv)
+    for job, s in res.summary.items():
+        print(f"coldstart.{job} borrowed_final={s['borrowed_final']:.4f} "
+              f"borrowed_first={s['borrowed_first']:.4f} "
+              f"mean_final={s['mean_final']:.4f} "
+              f"beats_mean={s['beats_mean']} "
+              f"sources={','.join(s['sources'])} "
+              f"confidence={s['confidence_final']:.3f}")
+    print(f"coldstart.trajectory {out} rows={len(res.records)}")
+    print(f"coldstart.fingerprint {res.fingerprint}")
+    print(f"coldstart.wall_s {res.wall_s:.1f}")
+    print(f"coldstart.ok {res.ok}")
     return 0 if res.ok else 1
 
 

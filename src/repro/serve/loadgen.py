@@ -114,7 +114,10 @@ class LoadReport:
         if self.server is not None:
             d["server"] = json.loads(codec.encode(self.server))
             d["predict_mean_batch"] = self.predict_mean_batch()
-        return d
+        # through the strict-JSON codec: an empty-window report carries
+        # NaN rps/percentiles, which must travel as float-tag objects
+        # ({"__float__": "nan"}), not the non-standard NaN literal
+        return json.loads(codec.encode(d))
 
 
 async def _request(reader: asyncio.StreamReader,
@@ -211,7 +214,10 @@ async def run_loadgen(host: str, port: int, *, connections: int = 64,
     return LoadReport(
         requests=len(statuses), ok=ok, errors=len(statuses) - ok,
         connections=connections, wall_s=wall,
-        rps=len(statuses) / wall if wall > 0 else math.inf,
+        # a rep window with zero completed requests (warmup-only short
+        # runs) has no throughput to report: NaN, like the latency
+        # percentiles — never a division by zero or a fake infinity
+        rps=len(statuses) / wall if statuses and wall > 0 else math.nan,
         p50_ms=pct(50), p95_ms=pct(95), p99_ms=pct(99),
         op_counts=dict(sorted(op_counts.items())), server=server)
 

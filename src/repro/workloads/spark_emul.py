@@ -256,15 +256,19 @@ def user_design(job: str, user: int, seed: int = 0, n_cells: int = 4,
 
 
 def _measure_design(job: str, design: List[Tuple[str, float, Tuple]],
-                    seed: int) -> RuntimeData:
+                    seed: int, schema: JobSchema = None,
+                    runtime_scale: float = 1.0) -> RuntimeData:
     """Emulated dataset for one design, assembled straight into the
     columnar layout.
 
     The measurement loop is inherently per-configuration (each cell's noise
     stream is seeded from its identity hash), but the columns are written
     into preallocated arrays and adopted zero-copy by ``from_columns`` —
-    no intermediate Python row lists."""
-    schema = SCHEMAS[job]
+    no intermediate Python row lists.  ``schema`` defaults to the canonical
+    one for ``job``; cold-job emulation passes its renamed schema and a
+    per-job efficiency ``runtime_scale``."""
+    if schema is None:
+        schema = SCHEMAS[job]
     machines = tuple(MACHINES)
     code_of = {m: i for i, m in enumerate(machines)}
     n = len(design)
@@ -276,7 +280,7 @@ def _measure_design(job: str, design: List[Tuple[str, float, Tuple]],
         codes[i] = code_of[machine]
         scale_out[i] = s
         context[i] = cell
-        runtime[i] = _measure(job, machine, s, cell, seed)
+        runtime[i] = _measure(job, machine, s, cell, seed) * runtime_scale
     return RuntimeData.from_columns(schema, machines, codes, scale_out,
                                     context, runtime)
 
@@ -343,6 +347,85 @@ def adversarial_user_data(job: str, user: int, seed: int, kind: str,
         machines = machines[idx]
         y = y[idx] * rng.lognormal(0.0, 0.05, size=len(idx))
     return RuntimeData(data.schema, machines, X, y)
+
+
+# ---------------------------------------------------------------------------
+# cold-job emulation (zero-history cross-job transfer evaluation)
+# ---------------------------------------------------------------------------
+
+def cold_job_name(job: str) -> str:
+    """Name of the held-out zero-history twin of a canonical job family."""
+    return f"{job}-cold"
+
+
+def cold_schema(job: str) -> JobSchema:
+    """Schema of the cold twin: same feature layout, different job name —
+    the hub treats it as a completely separate job with no history."""
+    base = SCHEMAS[job]
+    return JobSchema(cold_job_name(job), base.context_features,
+                     base.base_features)
+
+
+def cold_efficiency(job: str, seed: int = 0) -> float:
+    """Systematic runtime offset of the cold twin vs its family (a
+    different input dataset / code version running the same algorithm)."""
+    return float(derived_rng("cold-eff", job, seed).uniform(0.92, 1.08))
+
+
+def cold_design(job: str, seed: int = 0,
+                jitter: float = 0.15) -> List[Tuple[str, float, Tuple]]:
+    """The cold twin's execution context: every canonical cell with its
+    continuous components perturbed by up to ``jitter``, over the full
+    machine x scale-out grid.  Same jitter discipline as ``user_design``
+    (integer parameters stay on the canonical grid)."""
+    rng = derived_rng("cold", job, seed)
+    cells, scale = _job_cells(job)
+    jitterable = _JITTERABLE[job]
+    ccells = []
+    for cell in cells:
+        cell = [float(v) for v in cell]
+        for j in jitterable:
+            cell[j] *= float(rng.uniform(1.0 - jitter, 1.0 + jitter))
+        ccells.append(tuple(cell))
+    return [(m, float(s), cell)
+            for m in MACHINES for s in scale for cell in ccells]
+
+
+def cold_true_runtime(job: str, machine: str, s: float, features: Tuple,
+                      seed: int = 0) -> float:
+    """Noise-free ground truth for the cold twin (family law x efficiency)."""
+    return true_runtime(job, machine, s, features) * cold_efficiency(job, seed)
+
+
+def generate_cold_job_data(job: str, seed: int = 0) -> RuntimeData:
+    """The cold twin's full emulated dataset (evaluation ground truth —
+    a real hub never has this; replay holds it out as the test set)."""
+    return _measure_design(job, cold_design(job, seed), seed * 7919 + 13,
+                           schema=cold_schema(job),
+                           runtime_scale=cold_efficiency(job, seed))
+
+
+def cold_probe(job: str, seed: int = 0,
+               rows_per_machine: int = 3) -> RuntimeData:
+    """The few measurements a new job's owner has actually run: a small
+    deterministic slice of the cold design (``rows_per_machine`` per
+    machine type) — enough to sketch a transfer signature, far too few to
+    fit models."""
+    design = cold_design(job, seed)
+    rng = derived_rng("cold-probe", job, seed)
+    by_machine: Dict[str, List[Tuple[str, float, Tuple]]] = {}
+    for d in design:
+        by_machine.setdefault(d[0], []).append(d)
+    probe = []
+    for m in sorted(by_machine):
+        rows = by_machine[m]
+        idx = sorted(rng.choice(len(rows),
+                                size=min(rows_per_machine, len(rows)),
+                                replace=False).tolist())
+        probe.extend(rows[i] for i in idx)
+    return _measure_design(job, probe, seed * 7919 + 13,
+                           schema=cold_schema(job),
+                           runtime_scale=cold_efficiency(job, seed))
 
 
 def generate_all(seed: int = 0) -> Dict[str, RuntimeData]:

@@ -143,6 +143,19 @@ def render() -> str:
     w(_pretty(golden["stats_response"]))
     w("```")
     w("")
+    w("### Cold-start transfer")
+    w("")
+    w("On transfer-enabled gateways, `predict`/`choose` answers for a job")
+    w("without enough history of its own are served from the nearest")
+    w("donor job's fitted models and stamped with `transfer_source` and a")
+    w("discounted `transfer_confidence`.  Self-served answers omit both")
+    w("keys entirely, so pre-transfer payloads are byte-identical.")
+    for name in ("predict_response_transfer", "choose_response_transfer"):
+        w("")
+        w("```json")
+        w(_pretty(golden[name]))
+        w("```")
+    w("")
     w("### Error envelopes")
     for name in _ERROR_SAMPLES:
         w("")

@@ -111,6 +111,16 @@ def golden_samples():
         "shutting_down_envelope": Response.failure(
             "shutting_down", "edge is draining for shutdown; retry "
             "against another replica"),
+        # cold-start transfer: answers borrowed from a donor job's models
+        # carry transfer_source + a discounted transfer_confidence;
+        # self-served envelopes omit both keys entirely (see the
+        # omit-default samples above, which stay byte-identical)
+        "predict_response_transfer": Response.success(PredictResult(
+            (182.4, 96.75), "gbm", -2.1, 0.12,
+            transfer_source="grep", transfer_confidence=0.56)),
+        "choose_response_transfer": Response.success(ChooseResult(
+            "m5.xlarge", 6, 210.0, 233.5, 0.021, True,
+            transfer_source="sørt-üser", transfer_confidence=0.2)),
     }
 
 
@@ -142,6 +152,23 @@ def test_pre_epoch_jobinfo_payload_decodes_with_defaults():
     back = codec.decode(json.dumps(payload))
     assert (back.epoch, back.compactions, back.rows_contributed) == (0, 0, 0)
     assert (back.job, back.rows) == ("grep", 10)
+
+
+def test_pre_transfer_result_payloads_decode_with_defaults():
+    """Result payloads minted before cold-start transfer existed (no
+    transfer_source/transfer_confidence keys) decode to the self-served
+    reading and re-encode byte-identically — the omit-default mechanism
+    makes the legacy wire form THE canonical form for non-borrowed
+    answers."""
+    for legacy in (PredictResult((100.2,), "gbm", -3.8, 0.1),
+                   ChooseResult("c5.xlarge", 4, 174.8, 196.1, 0.0165,
+                                False)):
+        text = codec.encode(legacy)
+        assert "transfer" not in text
+        back = codec.decode(text)
+        assert back.transfer_source == ""
+        assert back.transfer_confidence == 1.0
+        assert codec.encode(back) == text
 
 
 def test_api_docs_are_current():

@@ -495,6 +495,65 @@ def test_predict_bad_machine_is_an_envelope_without_a_lane(gateway):
 
 
 # --------------------------------------------------------------------------
+# insufficient-data hardening (zero-history / thin stores)
+# --------------------------------------------------------------------------
+
+def _thin_repo(hub, job="thin", machine="c5.xlarge", rows=0):
+    """Publish a repo whose store KEEPS ``machine`` in the vocabulary but
+    holds only ``rows`` rows for it (what subset/compaction leave behind)."""
+    d = hub.get("grep").store.data
+    idx = np.where(d.machine_type == machine)[0][:rows]
+    keep = np.concatenate([np.where(d.machine_type != machine)[0], idx])
+    thin = d.subset(np.sort(keep))
+    assert machine in thin.machines        # vocabulary outlives the rows
+    hub.publish(JobRepo(job, job, d.schema, RuntimeDataStore(thin, seed=0)))
+
+
+def test_zero_row_vocabulary_machine_is_a_typed_insufficient_data_error(
+        gateway, hub):
+    """A machine type can stay in the store vocabulary with 0 (or 1) rows
+    after subset/compaction; fitting it used to raise IndexError through
+    ``_respond`` as an ``internal`` envelope.  It must be a ``bad_request``
+    carrying the row counts."""
+    for rows in (0, 1):
+        job = f"thin{rows}"
+        _thin_repo(hub, job=job, rows=rows)
+        resp = gateway.predict(PredictRequest(
+            job, "c5.xlarge", ((4.0, 15.0, 0.02),)))
+        assert resp.status == "error" and resp.error_code == "bad_request"
+        assert resp.detail.startswith("insufficient_data:")
+        assert f"{rows} stored row(s)" in resp.detail
+        assert "c5.xlarge" in resp.detail and job in resp.detail
+        # model_errors fits the same predictor: same typed refusal
+        errs = gateway.model_errors(ModelErrorsRequest(
+            job, "c5.xlarge", ((4.0, 15.0, 0.02), (8.0, 15.0, 0.02)),
+            (60.0, 40.0)))
+        assert errs.error_code == "bad_request"
+        assert errs.detail.startswith("insufficient_data:")
+        # other machines of the same store still serve fine
+        ok = gateway.predict(PredictRequest(
+            job, "m5.xlarge", ((4.0, 15.0, 0.02),)))
+        assert ok.ok
+
+
+def test_async_zero_row_machine_is_an_envelope_without_a_lane(gateway, hub):
+    """The insufficient-data refusal happens at admit, BEFORE any lane is
+    created (mirror of the unknown-machine lane-hygiene test)."""
+    _thin_repo(hub, job="thin", rows=0)
+
+    async def drive():
+        async with AsyncHubGateway(gateway) as agw:
+            resp = await agw.predict(PredictRequest(
+                "thin", "c5.xlarge", ((4.0, 15.0, 0.02),)))
+            return resp, dict(agw.lane_stats)
+
+    resp, lanes = asyncio.run(drive())
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert resp.detail.startswith("insufficient_data:")
+    assert lanes == {}                     # refusal did not leak a lane
+
+
+# --------------------------------------------------------------------------
 # provenance backward compatibility
 # --------------------------------------------------------------------------
 

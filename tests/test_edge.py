@@ -379,3 +379,21 @@ def test_loadgen_closed_loop_reports_and_coalesces(gw):
     assert report.predict_mean_batch() >= 1.0
     d = report.to_json()
     assert d["requests"] == 96 and "server" in d
+
+
+def test_loadgen_empty_window_reports_nan_via_float_tags():
+    """A rep window with zero completed requests (warmup-only short runs)
+    reports NaN throughput — never a division by zero or an infinity —
+    and ``to_json`` carries it as a strict-JSON float tag."""
+    import json
+    import math
+
+    # requests=0 -> no workers even run; port 1 is never connected
+    report = asyncio.run(run_loadgen("127.0.0.1", 1, connections=4,
+                                     requests=0, jobs=("grep",), seed=0))
+    assert report.requests == 0 and report.server is None
+    assert math.isnan(report.rps)
+    assert math.isnan(report.p50_ms) and math.isnan(report.p99_ms)
+    d = report.to_json()
+    assert d["rps"] == {"__float__": "nan"}
+    json.dumps(d, allow_nan=False)         # strict JSON end to end

@@ -1,0 +1,253 @@
+"""Cold-start cross-job transfer: similarity properties (symmetric,
+permutation-invariant, self-maximal — for ARBITRARY runtime datasets, not
+just the emulated Spark jobs), version-keyed lookup caching, and the
+gateway fallback that serves unknown / under-supported jobs from the
+nearest donor's models with transfer-stamped envelopes."""
+import asyncio
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # deterministic example sweeps
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.api import codec
+from repro.api.gateway import AsyncHubGateway, HubGateway
+from repro.api.types import ChooseRequest, PredictRequest
+from repro.core.datastore import RuntimeDataStore
+from repro.core.features import JobSchema, RuntimeData
+from repro.core.hub import Hub, JobRepo
+from repro.core.transfer import (TransferIndex, TransferPolicy,
+                                 job_signature, similarity)
+from repro.workloads import spark_emul as W
+
+SCALEOUTS = (2, 3, 4, 6, 8, 12)
+PRICES = {m.name: m.price for m in W.MACHINES.values()}
+
+
+def _random_data(rng: np.random.Generator, n: int, k: int,
+                 job: str = "prop") -> RuntimeData:
+    schema = JobSchema(job, tuple(f"c{i}" for i in range(k)))
+    names = [f"m{i}" for i in range(int(rng.integers(1, 4)))]
+    machine_type = np.asarray(names)[rng.integers(0, len(names), size=n)]
+    X = np.empty((n, schema.n_features))
+    X[:, 0] = rng.integers(1, 64, size=n)                 # scale-out
+    X[:, 1:] = rng.uniform(0.05, 1000.0, size=(n, k + 1))  # size + context
+    y = rng.uniform(0.05, 5000.0, size=n)
+    return RuntimeData(schema, machine_type, X, y)
+
+
+# --------------------------------------------------------------------------
+# similarity properties
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 60), m=st.integers(1, 60), k=st.integers(0, 3),
+       seed=st.integers(0, 10**6))
+def test_similarity_symmetric_and_bounded(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    a = job_signature(_random_data(rng, n, k, "a"))
+    b = job_signature(_random_data(rng, m, k, "b"))
+    assert similarity(a, b) == similarity(b, a)
+    assert 0.0 <= similarity(a, b) <= 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 60), k=st.integers(0, 3), seed=st.integers(0, 10**6))
+def test_signature_invariant_under_row_permutation(n, k, seed):
+    """Contribution order must not move a job in signature space: the
+    sketch of any row permutation is the EXACT same signature (quantiles
+    and histograms are permutation-free; machine lists are sorted)."""
+    rng = np.random.default_rng(seed)
+    d = _random_data(rng, n, k)
+    perm = rng.permutation(n)
+    assert job_signature(d.subset(perm), "j") == job_signature(d, "j")
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 60), m=st.integers(1, 60), k=st.integers(0, 3),
+       seed=st.integers(0, 10**6))
+def test_self_similarity_is_maximal(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    a = job_signature(_random_data(rng, n, k, "a"))
+    b = job_signature(_random_data(rng, m, k, "b"))
+    assert similarity(a, a) == pytest.approx(1.0)
+    assert similarity(a, a) >= similarity(a, b) - 1e-12
+
+
+def test_incompatible_context_widths_never_match_well():
+    rng = np.random.default_rng(0)
+    a = job_signature(_random_data(rng, 40, 0, "a"))
+    b = job_signature(_random_data(rng, 40, 2, "b"))
+    # no context component can contribute across schema widths
+    assert similarity(a, b) <= 0.7
+
+
+def test_emulated_cold_probes_match_their_own_family():
+    """The discrimination claim behind the whole subsystem: each cold
+    twin's few probe rows rank the SAME family first among all
+    schema-compatible donors — including sgd/kmeans/pagerank, which share
+    a feature count."""
+    sigs = {j: job_signature(W.generate_job_data(j, 0), j)
+            for j in W.SCHEMAS}
+    for job in W.SCHEMAS:
+        probe = job_signature(W.cold_probe(job, 0))
+        scores = {d: similarity(probe, s) for d, s in sigs.items()
+                  if s.n_features == probe.n_features}
+        assert max(scores, key=scores.get) == job, (job, scores)
+
+
+# --------------------------------------------------------------------------
+# TransferIndex: version-keyed caching + lookup semantics
+# --------------------------------------------------------------------------
+
+def _fixture_hub(cold_rows=True):
+    hub = Hub()
+    for job in ("grep", "sort"):
+        d = W.generate_job_data(job, seed=0)
+        hub.publish(JobRepo(job, job, d.schema, RuntimeDataStore(d, seed=0)))
+    if cold_rows:
+        hub.publish(JobRepo(
+            "grep-cold", "grep (cold twin)", W.cold_schema("grep"),
+            RuntimeDataStore(W.cold_probe("grep", 0), seed=0)))
+    return hub
+
+
+def test_nearest_picks_schema_compatible_donor_with_confidence_discount():
+    hub = _fixture_hub()
+    pol = TransferPolicy()
+    match = hub.nearest_job("grep-cold", policy=pol)
+    assert match.source == "grep"                 # sort has the wrong width
+    assert 0.0 < match.similarity <= 1.0
+    assert match.confidence == pytest.approx(match.similarity * pol.discount)
+
+
+def test_nearest_for_rowless_job_uses_prior_confidence():
+    hub = _fixture_hub(cold_rows=False)
+    pol = TransferPolicy()
+    match = hub.nearest_job("never-seen", n_features=3, policy=pol)
+    assert match.source == "grep"
+    assert match.similarity == 0.0
+    assert match.confidence == pytest.approx(pol.unknown_prior * pol.discount)
+    # and with no schema hint, the best-supported store wins
+    assert hub.nearest_job("never-seen").source in ("grep", "sort")
+
+
+def test_lookup_caches_amortize_across_unchanged_store_versions():
+    hub = _fixture_hub()
+    index = hub.transfer_index(TransferPolicy())
+    index.nearest("grep-cold")
+    builds = index.stats["signature_builds"]
+    pairs = index.stats["pair_evals"]
+    for _ in range(5):
+        assert index.nearest("grep-cold").source == "grep"
+    assert index.stats["signature_builds"] == builds     # all cache hits
+    assert index.stats["pair_evals"] == pairs
+    # an accepted contribution moves the store version -> exactly the
+    # changed job re-sketches and its pairs recompute
+    repo = hub.get("grep")
+    extra = W.generate_user_data("grep", user=9, seed=3)
+    assert repo.store.contribute(extra).accepted
+    assert index.nearest("grep-cold").source == "grep"
+    assert index.stats["signature_builds"] == builds + 1
+    assert index.stats["pair_evals"] == pairs + 1
+
+
+# --------------------------------------------------------------------------
+# gateway cold-start fallback
+# --------------------------------------------------------------------------
+
+@pytest.fixture()
+def tgw():
+    return HubGateway(_fixture_hub(), PRICES, SCALEOUTS,
+                      transfer=TransferPolicy())
+
+
+def test_under_supported_job_borrows_with_transfer_stamped_envelope(tgw):
+    X = ((4.0, 15.0, 0.02),)
+    resp = tgw.predict(PredictRequest("grep-cold", "m5.xlarge", X))
+    assert resp.ok
+    assert resp.result.transfer_source == "grep"
+    assert 0.0 < resp.result.transfer_confidence < 1.0
+    # the borrowed prediction IS the donor's (same model, same runtimes)
+    donor = tgw.predict(PredictRequest("grep", "m5.xlarge", X))
+    assert donor.result.runtimes_s == resp.result.runtimes_s
+    assert donor.result.selected_model == resp.result.selected_model
+    # ... but the donor's own envelope carries no transfer fields on the
+    # wire, while the borrowed one does
+    assert "transfer_source" not in codec.encode(donor)
+    assert '"transfer_source":"grep"' in codec.encode(resp)
+
+
+def test_unknown_job_borrows_instead_of_erroring(tgw):
+    resp = tgw.predict(PredictRequest(
+        "never-seen", "m5.xlarge", ((4.0, 15.0, 0.02),)))
+    assert resp.ok and resp.result.transfer_source in ("grep", "sort")
+    pol = tgw.transfer
+    assert resp.result.transfer_confidence == pytest.approx(
+        pol.unknown_prior * pol.discount)
+
+
+def test_choose_borrows_and_matches_donor_choice(tgw):
+    ctx = (15.0, 0.02)
+    resp = tgw.choose(ChooseRequest("grep-cold", ctx, t_max=400.0))
+    assert resp.ok and resp.result.transfer_source == "grep"
+    donor = tgw.choose(ChooseRequest("grep", ctx, t_max=400.0))
+    assert (resp.result.machine_type, resp.result.scale_out) == \
+        (donor.result.machine_type, donor.result.scale_out)
+
+
+def test_transfer_disabled_by_default_and_no_donor_still_errors():
+    hub = _fixture_hub()
+    gw = HubGateway(hub, PRICES, SCALEOUTS)     # no policy: old behavior
+    resp = gw.predict(PredictRequest(
+        "never-seen", "m5.xlarge", ((4.0, 15.0, 0.02),)))
+    assert resp.error_code == "unknown_job"
+    # transfer on, but no schema-compatible donor published: typed error,
+    # not a nonsense borrow
+    tgw = HubGateway(hub, PRICES, SCALEOUTS, transfer=TransferPolicy())
+    wide = tgw.predict(PredictRequest(
+        "never-seen", "m5.xlarge", ((4.0, 1.0, 2.0, 3.0, 4.0),)))
+    assert wide.error_code == "unknown_job"
+
+
+def test_borrowed_machine_must_exist_in_donor_store(tgw):
+    resp = tgw.predict(PredictRequest(
+        "grep-cold", "warp-drive", ((4.0, 15.0, 0.02),)))
+    assert resp.error_code == "bad_request"
+    assert "warp-drive" in resp.detail and "grep-cold" in resp.detail
+
+
+def test_async_borrowed_lane_keyed_on_source_and_matches_inline(tgw):
+    """Borrowed single-row predicts batch on a source-keyed lane and the
+    envelopes are byte-identical to the sync path."""
+    X = ((4.0, 15.0, 0.02),)
+    inline = tgw.predict(PredictRequest("grep-cold", "m5.xlarge", X))
+
+    async def drive():
+        async with AsyncHubGateway(tgw, tick_s=0.002) as agw:
+            got = await asyncio.gather(*(
+                agw.predict(PredictRequest("grep-cold", "m5.xlarge", X))
+                for _ in range(8)))
+            return got, dict(agw.lane_stats)
+
+    got, lanes = asyncio.run(drive())
+    assert list(lanes) == ["grep-cold@m5.xlarge<-grep"]
+    assert lanes["grep-cold@m5.xlarge<-grep"].requests == 8
+    for resp in got:
+        assert codec.encode(resp) == codec.encode(inline)
+
+
+def test_cold_replay_mini_is_deterministic_and_beats_mean_baseline():
+    """One-family micro version of ``--cold-start-job``: byte-identical
+    reruns, and the borrowed model beats the global-mean baseline."""
+    from repro.eval.replay import ColdStartConfig, run_cold_start
+    cfg = ColdStartConfig(jobs=("grep",), n_users=2, seed=0)
+    a = run_cold_start(cfg)
+    b = run_cold_start(cfg)
+    assert a.tsv == b.tsv and a.fingerprint == b.fingerprint
+    s = a.summary["grep"]
+    assert s["sources"] == ["grep"]
+    assert s["beats_mean"] and a.ok
