@@ -23,6 +23,8 @@ from repro.api.types import (API_VERSION, AuthedRequest, ChooseRequest,
                              PredictRequest, PredictResult, Response,
                              SearchRequest, SearchResult, StatsResult,
                              TrustStateRequest, TrustStateResult)
+from repro.core.market import (ON_DEMAND, SPOT, MarketError, Placement,
+                               PriceBook)
 from repro.core.transfer import TransferPolicy
 
 __all__ = [
@@ -32,6 +34,6 @@ __all__ = [
     "ModelErrorsRequest", "ModelErrorsResult", "PredictRequest",
     "PredictResult", "Response", "SearchRequest", "SearchResult",
     "StatsResult", "TrustStateRequest", "TrustStateResult", "HubGateway",
-    "AsyncHubGateway", "TrustAuthority", "TransferPolicy", "decode",
-    "encode",
+    "AsyncHubGateway", "TrustAuthority", "TransferPolicy", "MarketError",
+    "ON_DEMAND", "SPOT", "Placement", "PriceBook", "decode", "encode",
 ]

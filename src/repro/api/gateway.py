@@ -38,6 +38,7 @@ from repro.api.types import (ERR_BAD_REQUEST, ERR_INTERNAL, ERR_TIMEOUT,
                              Response, SearchRequest, SearchResult,
                              TrustStateRequest, TrustStateResult)
 from repro.core.features import RuntimeData
+from repro.core.market import MarketError, PriceBook
 from repro.core.service import ConfigurationService
 from repro.core.transfer import TransferPolicy
 from repro.serve.config_service import BatchLane, LaneTimeoutError, ServeStats
@@ -66,9 +67,17 @@ class HubGateway:
     def __init__(self, hub, prices: Dict[str, float],
                  scaleouts: Sequence[int], *, confidence: float = 0.95,
                  seed: int = 0, auth: Optional[TrustAuthority] = None,
-                 transfer: Optional[TransferPolicy] = None):
+                 transfer: Optional[TransferPolicy] = None,
+                 market: Optional[PriceBook] = None):
         self.hub = hub
         self.auth = auth
+        # cloud market plane (repro.core.market): with a PriceBook set,
+        # choose scores a (machine x zone x purchase-option x scale-out)
+        # grid on interruption-adjusted expected cost and stamps the
+        # envelope with zone / purchase_option / expected_cost_usd.
+        # None (the default) keeps the static $/node-hour model and the
+        # pre-market wire format byte-for-byte.
+        self.market = market
         # cold-start cross-job transfer (Flora-style): with a policy set,
         # predict/choose for unknown or under-supported jobs borrow the
         # nearest published job's fitted models and stamp the envelope
@@ -121,7 +130,7 @@ class HubGateway:
                 or entry[1] != trust_version or entry[2] != specs:
             svc = ConfigurationService.from_repo(
                 repo, None, self.prices, self.scaleouts, seed=seed,
-                confidence=self.confidence)
+                confidence=self.confidence, market=self.market)
             self._services[(job, seed)] = entry = (version, trust_version,
                                                    specs, svc)
             while len(self._services) > self.MAX_SERVICES:
@@ -301,12 +310,19 @@ class HubGateway:
             raise ValueError(
                 f"context row has width {len(ctx)}, job {repo.job!r} "
                 f"expects {repo.schema.n_features - 1}")
+        if (req.zones is not None or req.purchase_options is not None) \
+                and self.market is None:
+            raise MarketError(
+                "placement constraints (zones / purchase_options) require "
+                "a market-enabled gateway: construct HubGateway with "
+                "market=PriceBook(...)")
         # a borrowed answer runs the DONOR's configuration service (its
         # fitted predictors over the shared grid), keyed under the donor
         # so cold jobs share the donor's warm service state
         choice = self._service(source or req.job, req.seed) \
             .choose_cluster_batch(
-                ctx[None, :], np.asarray([req.t_max], np.float64))[0]
+                ctx[None, :], np.asarray([req.t_max], np.float64),
+                zones=req.zones, options=req.purchase_options)[0]
         return ChooseResult.from_choice(choice, source, conf)
 
     def contribute(self, req) -> Response[ContributeResult]:
@@ -743,6 +759,14 @@ class AsyncHubGateway:
         if err is not None:
             return err
         try:
+            if req.zones is not None or req.purchase_options is not None:
+                # placement-constrained choices cannot share a lane's
+                # packed dispatch (a lane batches per (job, seed) with
+                # ONE placement universe per tick) — dispatch inline,
+                # already admitted, same envelope as the sync path.  A
+                # bad constraint therefore answers a typed bad_request
+                # without ever creating a lane.
+                return self.gateway._respond(self.gateway._choose, req)
             ctx = req.context
             lane = self._lane(
                 req.job, req.seed,

@@ -57,11 +57,20 @@ class PredictRequest:
 
 @dataclass(frozen=True, slots=True)
 class ChooseRequest:
-    """Best (machine type, scale-out) for one execution context."""
+    """Best (machine type, scale-out) for one execution context.
+
+    ``zones``/``purchase_options`` constrain market-aware placement on a
+    market-enabled gateway (None — and absent on the wire — means
+    unconstrained; an empty tuple or an unknown name is a typed
+    ``bad_request``)."""
     job: str
     context: Tuple[float, ...]            # context row (no scale-out)
     t_max: float = math.nan               # deadline seconds; NaN = none
     seed: Optional[int] = None            # None = gateway's default seed
+    zones: Optional[Tuple[str, ...]] = field(
+        default=None, metadata={"omit_default": True})
+    purchase_options: Optional[Tuple[str, ...]] = field(
+        default=None, metadata={"omit_default": True})
 
 
 @dataclass(frozen=True, slots=True)
@@ -165,7 +174,15 @@ class ChooseResult:
 
     ``transfer_source``/``transfer_confidence`` mark answers served from
     a donor job's models for a cold job (empty/1.0 — and absent on the
-    wire — when the job answered for itself)."""
+    wire — when the job answered for itself).
+
+    Market-enabled gateways additionally stamp the placement the choice
+    buys (``zone`` + ``purchase_option``) and the naive-vs-adjusted cost
+    breakdown: ``cost_usd`` stays the naive listed-price cost while
+    ``expected_cost_usd`` is the interruption-adjusted expected cost the
+    selection actually ranked on.  All three default (and are absent on
+    the wire) on static-price gateways, so pre-market payloads are
+    byte-identical."""
     machine_type: str
     scale_out: int
     predicted_runtime_s: float
@@ -176,6 +193,11 @@ class ChooseResult:
                                  metadata={"omit_default": True})
     transfer_confidence: float = field(default=1.0,
                                        metadata={"omit_default": True})
+    zone: str = field(default="", metadata={"omit_default": True})
+    purchase_option: str = field(default="",
+                                 metadata={"omit_default": True})
+    expected_cost_usd: float = field(default=0.0,
+                                     metadata={"omit_default": True})
 
     @classmethod
     def from_choice(cls, choice, transfer_source: str = "",
@@ -183,13 +205,18 @@ class ChooseResult:
         return cls(choice.machine_type, choice.scale_out,
                    choice.predicted_runtime_s, choice.runtime_bound_s,
                    choice.cost_usd, choice.bottleneck,
-                   transfer_source, transfer_confidence)
+                   transfer_source, transfer_confidence,
+                   getattr(choice, "zone", ""),
+                   getattr(choice, "purchase_option", ""),
+                   getattr(choice, "expected_cost_usd", 0.0))
 
     def to_choice(self):
         from repro.core.configurator import ClusterChoice
         return ClusterChoice(self.machine_type, self.scale_out,
                              self.predicted_runtime_s, self.runtime_bound_s,
-                             self.cost_usd, self.bottleneck)
+                             self.cost_usd, self.bottleneck,
+                             self.zone, self.purchase_option,
+                             self.expected_cost_usd)
 
 
 @dataclass(frozen=True, slots=True)

@@ -27,6 +27,7 @@ import numpy as np
 from scipy.special import erfinv
 
 from repro.core import engine
+from repro.core.market import validate_prices
 from repro.core.predictor import C3OPredictor
 
 
@@ -52,8 +53,15 @@ class ClusterChoice:
     scale_out: int
     predicted_runtime_s: float
     runtime_bound_s: float          # runtime + confidence margin
-    cost_usd: float                 # price * hours * nodes
+    cost_usd: float                 # listed price * hours * nodes
     bottleneck: bool                # expected memory bottleneck at this s
+    # market-aware selection (repro.core.market) stamps WHERE the cluster
+    # is bought and what it is expected to really cost once interruption
+    # risk is priced in; the static-price path leaves the defaults, so
+    # pre-market construction sites (and wire encodings) are unchanged
+    zone: str = ""                  # availability zone ("" = no market)
+    purchase_option: str = ""       # "on_demand" / "spot" ("" = no market)
+    expected_cost_usd: float = 0.0  # interruption-adjusted expected cost
 
 
 @dataclass
@@ -69,6 +77,9 @@ class Configurator:
 
     def __post_init__(self):
         validate_confidence(self.confidence)
+        # fail at construction, not as a bare KeyError mid-score (and
+        # never let a zero/negative price win cheapest-cost selection)
+        validate_prices(self.prices, (self.machine_type,))
 
     # ------------------------- grid scoring -------------------------------
     def _score(self, contexts: np.ndarray):
@@ -154,6 +165,7 @@ def choose_machine_type(predictors: Dict[str, C3OPredictor],
 
     The full (machine x scale-out) grid is dispatched through the engine
     before the first host sync (one batched predict per machine)."""
+    validate_prices(prices, predictors)
     names, _t, cost = engine.machine_grid_costs(predictors, prices,
                                                 scaleouts, context_row)
     best = cost[:, 0, :].min(axis=1)            # [M] cheapest per machine

@@ -486,6 +486,27 @@ def score_grid(predictor, scaleouts: Sequence[int], contexts: np.ndarray
     return t, mu, sigma
 
 
+def machine_grid_runtimes(predictors: Dict[str, object],
+                          scaleouts: Sequence[int],
+                          contexts: np.ndarray
+                          ) -> Tuple[List[str], np.ndarray]:
+    """Fused runtime predictions for the (machine x scale-out x context)
+    grid: every machine's grid prediction is dispatched before the first
+    host sync.  Returns (machine names, t [M, C, S]) with runtimes
+    clamped at >= 0 (a negative runtime would make a negative cost win
+    every cheapest-choice selection downstream)."""
+    contexts = np.atleast_2d(np.asarray(contexts, np.float64))
+    rows = grid_rows(scaleouts, contexts)
+    names, pending = [], []
+    for m, pred in predictors.items():
+        names.append(m)
+        pending.append(_predict_rows(pred, rows))           # async dispatch
+    t = np.stack([np.asarray(p, np.float64)
+                  .reshape(len(scaleouts), len(contexts)).T
+                  for p in pending])
+    return names, np.maximum(t, 0.0)
+
+
 def machine_grid_costs(predictors: Dict[str, object],
                        prices: Dict[str, float],
                        scaleouts: Sequence[int],
@@ -495,18 +516,42 @@ def machine_grid_costs(predictors: Dict[str, object],
 
     Dispatches every machine's grid prediction before the first host sync;
     returns (machine names, t [M, C, S], cost [M, C, S])."""
-    contexts = np.atleast_2d(np.asarray(contexts, np.float64))
-    rows = grid_rows(scaleouts, contexts)
+    names, t = machine_grid_runtimes(predictors, scaleouts, contexts)
     S = np.asarray(scaleouts, np.float64)
-    names, pending = [], []
-    for m, pred in predictors.items():
-        names.append(m)
-        pending.append(_predict_rows(pred, rows))           # async dispatch
-    t = np.stack([np.asarray(p, np.float64)
-                  .reshape(len(S), len(contexts)).T for p in pending])
-    # clamp extrapolated negative runtimes: a negative cost would win every
-    # cheapest-choice selection downstream
-    t = np.maximum(t, 0.0)
     cost = np.stack([prices[m] for m in names])[:, None, None] \
         * (t / 3600.0) * S[None, None, :]
     return names, t, cost
+
+
+def placement_grid_costs(predictors: Dict[str, object], book,
+                         scaleouts: Sequence[int], contexts: np.ndarray,
+                         zones=None, options=None):
+    """Score the (machine x placement x context x scale-out) grid.
+
+    The placement axis is pure broadcasting over the SAME fused runtime
+    dispatch as ``machine_grid_costs`` — predicted runtime does not
+    depend on where the cluster is bought, so a Z-zone book adds a numpy
+    axis, not a prediction loop.  ``book`` is a
+    ``repro.core.market.PriceBook``; returns
+
+        (names, placements, t [M, C, S],
+         et [M, P, C, S], naive [M, P, C, S], adjusted [M, P, C, S])
+
+    where ``et`` is the interruption-adjusted expected completion time,
+    ``naive`` the listed-price cost (price x t x nodes) and ``adjusted``
+    the interruption-adjusted expected cost (price x E[t] x nodes)."""
+    from repro.core.market import expected_completion_time_s
+    names, t = machine_grid_runtimes(predictors, scaleouts, contexts)
+    placements = book.resolve(zones, options)
+    prices = book.price_matrix(names, placements)           # [M, P]
+    rates = book.rates(placements)                          # [P]
+    S = np.asarray(scaleouts, np.float64)
+    et = expected_completion_time_s(t[:, None, :, :],
+                                    rates[None, :, None, None],
+                                    book.restart_overhead_s)
+    # same op order as machine_grid_costs so a flat (single-placement,
+    # rate-0) book reproduces the legacy cost bit-for-bit
+    p4 = prices[:, :, None, None]
+    naive = p4 * (t[:, None, :, :] / 3600.0) * S[None, None, None, :]
+    adjusted = p4 * (et / 3600.0) * S[None, None, None, :]
+    return names, placements, t, et, naive, adjusted

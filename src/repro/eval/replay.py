@@ -39,8 +39,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.api.types import PredictRequest
+from repro.api.types import ChooseRequest, PredictRequest
 from repro.core.datastore import RuntimeDataStore
+from repro.core.market import realized_completion_time_s
 from repro.core.hub import Hub, JobRepo
 from repro.core.predictor import DEFAULT_MODELS
 from repro.core.transfer import TransferPolicy
@@ -502,6 +503,185 @@ def run_cold_start(cfg: ColdStartConfig) -> ColdStartResult:
 
 
 # ---------------------------------------------------------------------------
+# spot-market replay (cloud market plane evaluation)
+# ---------------------------------------------------------------------------
+
+SPOT_COLUMNS = ("job", "query", "tick", "arm", "machine", "zone", "option",
+                "scale_out", "predicted_s", "true_s", "realized_s",
+                "listed_cost", "expected_cost", "realized_cost")
+
+
+@dataclass(frozen=True)
+class SpotMarketConfig:
+    """Interruption-aware placement evaluation: per job family, a seeded
+    stream of choose queries is answered by two gateways over the SAME
+    emulated spot market (``spark_emul.generate_price_book``) — one
+    ranking on interruption-adjusted expected cost, one on the naive
+    cheapest listed price (the same book with every interruption rate
+    zeroed).  Both choices are then charged their *realized* completion
+    cost: true emulated runtime plus seeded Exp(rate) interruption draws
+    with restart overhead, priced at the placement's listed rate."""
+    jobs: Tuple[str, ...] = tuple(SCHEMAS)
+    seed: int = 0
+    n_queries: int = 40
+    n_ticks: int = 64
+    #: seeded interruption realizations averaged per (query, choice) —
+    #: the workload recurs (a daily production job), so its realized cost
+    #: is a mean over runs, not one lucky/unlucky draw
+    n_trials: int = 16
+    model_names: Tuple[str, ...] = DEFAULT_MODELS
+    max_cv_folds: int = 20
+    scaleouts: Tuple[int, ...] = (2, 3, 4, 6, 8, 12)
+
+
+@dataclass
+class SpotMarketResult:
+    config: SpotMarketConfig
+    records: List[dict]
+    tsv: str
+    fingerprint: str
+    summary: Dict[str, dict]
+    wall_s: float
+
+    @property
+    def ok(self) -> bool:
+        """Interruption-adjusted selection must strictly beat the naive
+        cheapest-listed-price baseline on total realized completion cost
+        for EVERY emulated job family."""
+        return bool(self.summary) and all(s["ok"]
+                                          for s in self.summary.values())
+
+
+def spot_tsv(records: Sequence[dict]) -> str:
+    """Canonical TSV of the spot-market records (byte-identical across
+    reruns of the same config on the same platform)."""
+    lines = ["\t".join(SPOT_COLUMNS)]
+    for r in records:
+        lines.append("\t".join((
+            r["job"], str(r["query"]), str(r["tick"]), r["arm"],
+            r["machine"], r["zone"], r["option"], str(r["scale_out"]),
+            "%.6g" % r["predicted_s"], "%.6g" % r["true_s"],
+            "%.6g" % r["realized_s"], "%.6g" % r["listed_cost"],
+            "%.6g" % r["expected_cost"], "%.6g" % r["realized_cost"])))
+    return "\n".join(lines) + "\n"
+
+
+def _spot_query_context(job: str, q: int, seed: int) -> Tuple[float, ...]:
+    """Seeded query context: a canonical design cell with the (physically
+    continuous) dataset size jittered, integer parameters kept on-grid."""
+    cells, _ = W._job_cells(job)
+    rng = derived_rng("spot-query", job, q, seed)
+    cell = list(cells[int(rng.integers(len(cells)))])
+    cell[0] = float(cell[0]) * float(rng.uniform(0.85, 1.15))
+    return tuple(float(v) for v in cell)
+
+
+def _spot_realize(job: str, q: int, choice, book, n_trials: int,
+                  seed: int) -> Tuple[float, float, float]:
+    """(true runtime, realized wall-clock, realized $) for one choice,
+    averaged over ``n_trials`` seeded interruption realizations.
+
+    The realizations draw from the REAL market's interruption rate for
+    the chosen placement — reality does not care whether the chooser
+    priced the risk in — keyed on (job, query, placement, machine,
+    scale-out) so both arms making the SAME choice are charged the
+    identical draws."""
+    ctx = _spot_query_context(job, q, seed)
+    true_t = W.true_runtime(job, choice.machine_type,
+                            float(choice.scale_out), ctx)
+    rate = book.rate_of(choice.zone, choice.purchase_option)
+    rng = derived_rng("spot-realize", job, q, choice.zone,
+                      choice.purchase_option, choice.machine_type,
+                      choice.scale_out, seed)
+    realized_s = float(np.mean([
+        realized_completion_time_s(true_t, rate, book.restart_overhead_s,
+                                   rng) for _ in range(n_trials)]))
+    price = book.price_of(choice.machine_type, choice.zone,
+                          choice.purchase_option)
+    realized_cost = price * (realized_s / 3600.0) * choice.scale_out
+    return float(true_t), float(realized_s), float(realized_cost)
+
+
+def summarize_spot(records: Sequence[dict],
+                   cfg: SpotMarketConfig) -> Dict[str, dict]:
+    """Per-family rollup: total realized cost per arm, the savings
+    ratio, and how often the two arms actually chose differently."""
+    summary: Dict[str, dict] = {}
+    for job in cfg.jobs:
+        rows = [r for r in records if r["job"] == job]
+        if not rows:
+            continue
+        adj = sum(r["realized_cost"] for r in rows
+                  if r["arm"] == "adjusted")
+        nai = sum(r["realized_cost"] for r in rows if r["arm"] == "naive")
+        by_q: Dict[int, dict] = {}
+        for r in rows:
+            by_q.setdefault(r["query"], {})[r["arm"]] = (
+                r["machine"], r["zone"], r["option"], r["scale_out"])
+        diverged = sum(1 for d in by_q.values()
+                       if d.get("adjusted") != d.get("naive"))
+        summary[job] = {
+            "adjusted_cost": float(adj), "naive_cost": float(nai),
+            "savings": float(nai / adj) if adj > 0 else float("inf"),
+            "diverged": int(diverged), "queries": len(by_q),
+            "ok": bool(adj < nai),
+        }
+    return summary
+
+
+def run_spot_market(cfg: SpotMarketConfig) -> SpotMarketResult:
+    """The spot-market evaluation loop (see ``SpotMarketConfig``)."""
+    t0 = time.time()
+    hub = Hub()
+    for job in cfg.jobs:
+        store = RuntimeDataStore(
+            W.generate_job_data(job, cfg.seed), seed=cfg.seed,
+            model_names=list(cfg.model_names))
+        hub.publish(JobRepo(
+            job, job, SCHEMAS[job], store,
+            model_names=list(cfg.model_names),
+            predictor_kw={"pad_rows": True,
+                          "max_cv_folds": cfg.max_cv_folds}))
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    book = W.generate_price_book(cfg.seed, cfg.n_ticks)
+    naive_book = book.naive_view()
+    gw_adj = hub.gateway(prices, cfg.scaleouts, seed=cfg.seed, market=book)
+    gw_naive = hub.gateway(prices, cfg.scaleouts, seed=cfg.seed,
+                           market=naive_book)
+    records: List[dict] = []
+    for job in cfg.jobs:
+        for q in range(cfg.n_queries):
+            tick = q % cfg.n_ticks
+            book.seek(tick)
+            naive_book.seek(tick)
+            ctx = _spot_query_context(job, q, cfg.seed)
+            for arm, gw in (("adjusted", gw_adj), ("naive", gw_naive)):
+                resp = gw.choose(ChooseRequest(job, ctx, seed=cfg.seed))
+                if not resp.ok:
+                    raise RuntimeError(
+                        f"spot-market choose failed for {job!r}: "
+                        f"{resp.error_code}: {resp.detail}")
+                c = resp.result
+                true_t, realized_s, realized_cost = _spot_realize(
+                    job, q, c, book, cfg.n_trials, cfg.seed)
+                records.append({
+                    "job": job, "query": q, "tick": tick, "arm": arm,
+                    "machine": c.machine_type, "zone": c.zone,
+                    "option": c.purchase_option,
+                    "scale_out": int(c.scale_out),
+                    "predicted_s": float(c.predicted_runtime_s),
+                    "true_s": true_t, "realized_s": realized_s,
+                    "listed_cost": float(c.cost_usd),
+                    "expected_cost": float(c.expected_cost_usd),
+                    "realized_cost": realized_cost})
+    tsv = spot_tsv(records)
+    return SpotMarketResult(
+        config=cfg, records=records, tsv=tsv,
+        fingerprint=hashlib.sha256(tsv.encode()).hexdigest(),
+        summary=summarize_spot(records, cfg), wall_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -525,6 +705,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="attempt a store compaction (epoch transition, "
                          "cap-escalation ladder) every N contributions; "
                          "0 disables — the accuracy-vs-size frontier mode")
+    ap.add_argument("--spot-market", action="store_true",
+                    help="cloud-market evaluation: a seeded multi-AZ "
+                         "spot/on-demand market (spark_emul."
+                         "generate_price_book) answers choose queries "
+                         "via interruption-adjusted expected cost vs the "
+                         "naive cheapest-listed-price baseline, scored "
+                         "on realized completion cost (replay flags "
+                         "other than --jobs/--seed/--queries/--out are "
+                         "ignored)")
+    ap.add_argument("--queries", type=int, default=40,
+                    help="choose queries per job family in --spot-market "
+                         "mode")
     ap.add_argument("--cold-start-job", default=None, metavar="JOB",
                     help="zero-history transfer evaluation: emulate a "
                          "held-out cold twin of JOB ('all' = every job) "
@@ -539,6 +731,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
     if args.compact_every < 0:
         ap.error("--compact-every must be >= 0")
+    if args.spot_market:
+        return _main_spot_market(ap, args)
     if args.cold_start_job is not None:
         return _main_cold_start(ap, args)
     track_kw = ({} if args.track_models is None else
@@ -573,6 +767,34 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     print(f"replay.fingerprint {res.fingerprint}")
     print(f"replay.wall_s {res.wall_s:.1f}")
     print(f"replay.ok {res.ok}")
+    return 0 if res.ok else 1
+
+
+def _main_spot_market(ap, args) -> int:
+    """--spot-market branch of the CLI."""
+    jobs = tuple(args.jobs.split(","))
+    unknown = [j for j in jobs if j not in SCHEMAS]
+    if unknown:
+        ap.error(f"--jobs names unknown job(s) {', '.join(unknown)} "
+                 f"(known: {', '.join(SCHEMAS)})")
+    if args.queries < 1:
+        ap.error("--queries must be >= 1")
+    cfg = SpotMarketConfig(jobs=jobs, seed=args.seed,
+                           n_queries=args.queries)
+    res = run_spot_market(cfg)
+    out = args.out or os.path.join(
+        "eval_out", f"spotmarket_q{cfg.n_queries}_seed{cfg.seed}.tsv")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        f.write(res.tsv)
+    for job, s in res.summary.items():
+        print(f"spotmarket.{job} adjusted=${s['adjusted_cost']:.4f} "
+              f"naive=${s['naive_cost']:.4f} savings={s['savings']:.2f}x "
+              f"diverged={s['diverged']}/{s['queries']} ok={s['ok']}")
+    print(f"spotmarket.trajectory {out} rows={len(res.records)}")
+    print(f"spotmarket.fingerprint {res.fingerprint}")
+    print(f"spotmarket.wall_s {res.wall_s:.1f}")
+    print(f"spotmarket.ok {res.ok}")
     return 0 if res.ok else 1
 
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import hashlib
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -442,3 +442,75 @@ def context_groups(data: RuntimeData) -> List[np.ndarray]:
         return [np.arange(len(data))]
     _, gid = np.unique(np.round(ctx, 9), axis=0, return_inverse=True)
     return [np.where(gid == g)[0] for g in range(gid.max() + 1)]
+
+
+# ---------------------------------------------------------------------------
+# spot-market emulation (cloud market plane evaluation)
+# ---------------------------------------------------------------------------
+
+#: emulated availability zones with (spot discount vs on-demand,
+#: (lo, hi) hourly interruption-rate band).  The ordering is the market's
+#: core trade-off: the deeper the discount, the flakier the capacity —
+#: az-1c lists the lowest spot price AND interrupts so often that long
+#: jobs placed there pay for the discount several times over in restarts.
+SPOT_ZONES: Tuple[str, ...] = ("az-1a", "az-1b", "az-1c")
+_ZONE_MARKET: Dict[str, Tuple[float, Tuple[float, float]]] = {
+    "az-1a": (0.72, (0.2, 0.5)),
+    "az-1b": (0.50, (1.5, 2.5)),
+    # az-1c's compressed-time volatility is deliberately extreme: the
+    # emulated jobs run seconds-to-minutes (not hours), so the rate that
+    # makes "cheapest listed price" a trap at THIS time scale is ~30/h
+    "az-1c": (0.34, (25.0, 40.0)),
+}
+
+#: fixed restart overhead (seconds) an interrupted attempt pays before
+#: retrying from scratch in the emulated market
+SPOT_RESTART_OVERHEAD_S = 180.0
+
+
+def spot_interruption_rate(zone: str, seed: int = 0) -> float:
+    """Seeded hourly interruption rate for one zone's spot capacity,
+    drawn once per (zone, seed) from the zone's band."""
+    lo, hi = _ZONE_MARKET[zone][1]
+    return float(derived_rng("spot-rate", zone, seed).uniform(lo, hi))
+
+
+def spot_price_series(machine: str, zone: str, seed: int = 0,
+                      n_ticks: int = 64) -> np.ndarray:
+    """Seeded time-varying spot price vector for one (machine, zone).
+
+    A mean-reverting multiplicative walk around the zone's discount
+    level, clipped to (0.12, 0.97) x on-demand — spot never beats free
+    and never exceeds the listed rate."""
+    base = MACHINES[machine].price
+    disc = _ZONE_MARKET[zone][0]
+    rng = derived_rng("spot-price", machine, zone, seed)
+    x, out = 0.0, np.empty(n_ticks, np.float64)
+    for t in range(n_ticks):
+        x = 0.88 * x + float(rng.normal(0.0, 0.06))
+        out[t] = base * float(np.clip(disc * math.exp(x), 0.12, 0.97))
+    return out
+
+
+def generate_price_book(seed: int = 0, n_ticks: int = 64,
+                        zones: Tuple[str, ...] = SPOT_ZONES,
+                        machines: Optional[Tuple[str, ...]] = None,
+                        restart_overhead_s: float = SPOT_RESTART_OVERHEAD_S):
+    """Seeded multi-AZ spot/on-demand ``PriceBook`` over the emulated
+    machine catalog: per-zone on-demand price spread (capacity pricing
+    differs a little per AZ), seeded spot price series, and
+    discount-correlated interruption rates."""
+    from repro.core.market import ON_DEMAND, SPOT, PriceBook
+    machines = tuple(MACHINES) if machines is None else tuple(machines)
+    prices: Dict[Tuple[str, str, str], np.ndarray] = {}
+    rates: Dict[Tuple[str, str], float] = {}
+    for z in zones:
+        od_spread = float(derived_rng("od-spread", z, seed).uniform(0.985,
+                                                                    1.015))
+        rates[(z, ON_DEMAND)] = 0.0
+        rates[(z, SPOT)] = spot_interruption_rate(z, seed)
+        for m in machines:
+            prices[(m, z, ON_DEMAND)] = np.full(
+                n_ticks, MACHINES[m].price * od_spread)
+            prices[(m, z, SPOT)] = spot_price_series(m, z, seed, n_ticks)
+    return PriceBook(prices, rates, restart_overhead_s=restart_overhead_s)

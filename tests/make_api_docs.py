@@ -156,6 +156,27 @@ def render() -> str:
         w(_pretty(golden[name]))
         w("```")
     w("")
+    w("### Spot markets & placement")
+    w("")
+    w("On market-enabled gateways (constructed with a")
+    w("`repro.core.market.PriceBook`), `choose` scores a")
+    w("(machine × zone × purchase-option × scale-out) grid on")
+    w("interruption-adjusted expected cost.  Requests may constrain the")
+    w("placement with `zones` / `purchase_options` (absent = any; an")
+    w("empty tuple or an unknown name is a typed `bad_request`), and")
+    w("answers stamp the placement bought plus the naive-vs-adjusted")
+    w("cost breakdown: `cost_usd` stays the listed-price cost,")
+    w("`expected_cost_usd` is what the choice is expected to really")
+    w("cost once interruptions are priced in.  Market-less gateways")
+    w("omit all of these keys, so pre-market payloads are")
+    w("byte-identical.")
+    for name in ("choose_request_market", "choose_response_market",
+                 "placement_envelope"):
+        w("")
+        w("```json")
+        w(_pretty(golden[name]))
+        w("```")
+    w("")
     w("### Error envelopes")
     for name in _ERROR_SAMPLES:
         w("")

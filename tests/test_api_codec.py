@@ -121,6 +121,21 @@ def golden_samples():
         "choose_response_transfer": Response.success(ChooseResult(
             "m5.xlarge", 6, 210.0, 233.5, 0.021, True,
             transfer_source="sørt-üser", transfer_confidence=0.2)),
+        # cloud market plane: placement-constrained requests, market-mode
+        # answers stamped with the placement bought + the naive-vs-
+        # adjusted cost breakdown, and the typed refusal for a placement
+        # the book does not price (market-less envelopes above stay
+        # byte-identical via the same omit-default mechanism)
+        "choose_request_market": ChooseRequest(
+            "grep", (15.0, 0.02), t_max=400.0,
+            zones=("az-1a", "az-1b"), purchase_options=("spot",)),
+        "choose_response_market": Response.success(ChooseResult(
+            "c5.xlarge", 4, 174.8, 196.1, 0.0165, False,
+            zone="az-1b", purchase_option="spot",
+            expected_cost_usd=0.0184)),
+        "placement_envelope": Response.failure(
+            "bad_request", "unknown zone 'mars' (known zones: az-1a, "
+            "az-1b, az-1c)"),
     }
 
 
@@ -169,6 +184,33 @@ def test_pre_transfer_result_payloads_decode_with_defaults():
         assert back.transfer_source == ""
         assert back.transfer_confidence == 1.0
         assert codec.encode(back) == text
+
+
+def test_pre_market_payloads_decode_with_defaults():
+    """Choose payloads minted before the cloud market plane existed (no
+    zones/purchase_options on requests, no zone/purchase_option/
+    expected_cost_usd on results) decode to the static-price reading and
+    re-encode byte-identically — the legacy wire form stays THE
+    canonical form for market-less gateways."""
+    req = ChooseRequest("grep", (15.0, 0.02), t_max=300.0)
+    text = codec.encode(req)
+    assert "zones" not in text and "purchase" not in text
+    back = codec.decode(text)
+    assert back.zones is None and back.purchase_options is None
+    assert codec.encode(back) == text
+
+    res = ChooseResult("c5.xlarge", 4, 174.8, 196.1, 0.0165, False)
+    text = codec.encode(res)
+    for key in ("zone", "purchase_option", "expected_cost_usd"):
+        assert key not in text
+    back = codec.decode(text)
+    assert (back.zone, back.purchase_option, back.expected_cost_usd) \
+        == ("", "", 0.0)
+    assert codec.encode(back) == text
+    # and the round trip back to the core dataclass carries the defaults
+    choice = back.to_choice()
+    assert (choice.zone, choice.purchase_option,
+            choice.expected_cost_usd) == ("", "", 0.0)
 
 
 def test_api_docs_are_current():

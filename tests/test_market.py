@@ -1,0 +1,461 @@
+"""Cloud market plane: PriceBook validation, interruption math
+properties, market-mode grid selection, gateway placement surface."""
+import asyncio
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.api.gateway import AsyncHubGateway, HubGateway
+from repro.api.types import ChooseRequest
+from repro.core.datastore import RuntimeDataStore
+from repro.core.hub import Hub, JobRepo
+from repro.core.market import (DEFAULT_ZONE, ON_DEMAND, SPOT, MarketError,
+                               Placement, PriceBook,
+                               expected_completion_time_s, expected_cost_usd,
+                               realized_completion_time_s, validate_prices)
+from repro.core.service import ConfigurationService
+from repro.workloads import spark_emul as W
+
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+class FakePredictor:
+    """Deterministic runtime law: base * size / s + 30 * s seconds."""
+
+    def __init__(self, base):
+        self.base, self.mu, self.sigma = float(base), 0.0, 10.0
+
+    def predict(self, rows):
+        rows = np.asarray(rows, np.float64)
+        return self.base * rows[:, 1] / rows[:, 0] + 30.0 * rows[:, 0]
+
+    def predict_with_error(self, rows):
+        return self.predict(rows), self.mu, self.sigma
+
+
+PREDICTORS = {"m5": FakePredictor(40.0), "c5": FakePredictor(55.0)}
+PRICES = {"m5": 0.2, "c5": 0.17}
+SCALEOUTS = (2, 4, 8)
+
+
+def two_zone_book(restart_overhead_s=180.0):
+    """az-a: mild spot; az-c: deep discount, very flaky."""
+    return PriceBook(
+        {("m5", "az-a", ON_DEMAND): 0.2, ("m5", "az-a", SPOT): 0.14,
+         ("m5", "az-c", ON_DEMAND): 0.2, ("m5", "az-c", SPOT): 0.06,
+         ("c5", "az-a", ON_DEMAND): 0.17, ("c5", "az-a", SPOT): 0.12,
+         ("c5", "az-c", ON_DEMAND): 0.17, ("c5", "az-c", SPOT): 0.05},
+        {("az-a", SPOT): 0.2, ("az-c", SPOT): 10.0},
+        restart_overhead_s=restart_overhead_s)
+
+
+def emulated_gateway(market, jobs=("grep",), seed=0):
+    hub = Hub()
+    for job in jobs:
+        data = W.generate_job_data(job, seed)
+        hub.publish(JobRepo(job, job, data.schema,
+                            RuntimeDataStore(data, seed=seed),
+                            predictor_kw={"max_cv_folds": 10}))
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    return HubGateway(hub, prices, (2, 3, 4, 6), seed=seed, market=market)
+
+
+# --------------------------------------------------------------------------
+# PriceBook validation (tentpole + satellite: typed errors, not KeyErrors)
+# --------------------------------------------------------------------------
+
+def test_pricebook_rejects_missing_and_invalid_prices():
+    with pytest.raises(MarketError, match="positive finite"):
+        PriceBook({("m5", "z", ON_DEMAND): 0.0})
+    with pytest.raises(MarketError, match="positive finite"):
+        PriceBook({("m5", "z", ON_DEMAND): -0.1})
+    with pytest.raises(MarketError, match="positive finite"):
+        PriceBook({("m5", "z", ON_DEMAND): math.nan})
+    with pytest.raises(MarketError, match="positive finite"):
+        PriceBook({("m5", "z", ON_DEMAND): [0.2, math.inf]})
+    with pytest.raises(MarketError, match="empty price book"):
+        PriceBook({})
+    with pytest.raises(MarketError, match="unknown purchase option"):
+        PriceBook({("m5", "z", "reserved"): 0.2})
+
+
+def test_pricebook_requires_dense_machine_x_placement_coverage():
+    with pytest.raises(MarketError, match="has no price for zone"):
+        PriceBook({("m5", "z1", ON_DEMAND): 0.2,
+                   ("c5", "z2", ON_DEMAND): 0.17})
+
+
+def test_pricebook_requires_spot_interruption_rates():
+    with pytest.raises(MarketError, match="no interruption rate"):
+        PriceBook({("m5", "z", SPOT): 0.06})
+    with pytest.raises(MarketError, match="invalid interruption rate"):
+        PriceBook({("m5", "z", SPOT): 0.06}, {("z", SPOT): -1.0})
+    with pytest.raises(MarketError, match="prices no such placement"):
+        PriceBook({("m5", "z", ON_DEMAND): 0.2}, {("y", SPOT): 1.0})
+
+
+def test_pricebook_time_varying_series_wrap():
+    book = PriceBook({("m5", "z", ON_DEMAND): [0.2, 0.3, 0.4]})
+    assert book.n_ticks == 3
+    book.seek(1)
+    assert book.price_of("m5", "z", ON_DEMAND) == 0.3
+    book.advance(2)                                  # tick 3 wraps to 0
+    assert book.price_of("m5", "z", ON_DEMAND) == 0.2
+    assert book.price_of("m5", "z", ON_DEMAND, tick=2) == 0.4
+
+
+def test_pricebook_resolve_constraints_are_typed_errors():
+    book = two_zone_book()
+    assert [p.zone for p in book.resolve(zones=("az-a",))] \
+        == ["az-a", "az-a"]
+    assert [p.option for p in book.resolve(options=(SPOT,))] \
+        == [SPOT, SPOT]
+    with pytest.raises(MarketError, match="unknown zone 'mars'"):
+        book.resolve(zones=("mars",))
+    with pytest.raises(MarketError, match="unknown purchase option"):
+        book.resolve(options=("reserved",))
+    with pytest.raises(MarketError, match="empty placement constraint"):
+        book.resolve(zones=())
+    with pytest.raises(MarketError, match="empty placement constraint"):
+        book.resolve(options=())
+
+
+def test_validate_prices_flags_missing_zero_and_negative():
+    validate_prices(PRICES, ("m5", "c5"))
+    with pytest.raises(MarketError, match="no \\$/node-hour price"):
+        validate_prices(PRICES, ("m5", "r5"))
+    for bad in (0.0, -1.0, math.nan, math.inf, "free"):
+        with pytest.raises(MarketError, match="positive finite"):
+            validate_prices({"m5": bad}, ("m5",))
+
+
+def test_placement_rejects_unknown_option():
+    with pytest.raises(MarketError, match="unknown purchase option"):
+        Placement("z", "reserved")
+
+
+# --------------------------------------------------------------------------
+# interruption math properties (satellite 3)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(t=st.floats(1.0, 50_000.0), overhead=st.floats(0.0, 3600.0),
+       r1=st.floats(0.0, 50.0), r2=st.floats(0.0, 50.0))
+def test_expected_cost_monotone_in_interruption_rate(t, overhead, r1, r2):
+    lo, hi = sorted((r1, r2))
+    c_lo = expected_cost_usd(t, 0.2, 4, lo, overhead)
+    c_hi = expected_cost_usd(t, 0.2, 4, hi, overhead)
+    assert np.isfinite(c_lo) and np.isfinite(c_hi)
+    assert c_lo <= c_hi * (1 + 1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=st.floats(0.0, 50_000.0), overhead=st.floats(0.0, 3600.0),
+       price=st.floats(0.01, 10.0), nodes=st.integers(1, 64))
+def test_expected_cost_at_rate_zero_is_undiscounted(t, overhead, price,
+                                                    nodes):
+    c = expected_cost_usd(t, price, nodes, 0.0, overhead)
+    assert c == pytest.approx(price * (t / 3600.0) * nodes, rel=1e-12)
+    # and expected completion time degenerates to the runtime exactly
+    assert float(expected_completion_time_s(t, 0.0, overhead)) == t
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=st.floats(1.0, 50_000.0), overhead=st.floats(0.0, 3600.0),
+       price=st.floats(0.01, 10.0))
+def test_spot_and_on_demand_coincide_at_equal_price_and_rate_zero(
+        t, overhead, price):
+    """Rate-0 spot priced AT the on-demand rate is indistinguishable
+    from on-demand: the discount's only counterweight is the rate."""
+    spot = expected_cost_usd(t, price, 8, 0.0, overhead)
+    on_demand = expected_cost_usd(t, price, 8, 0.0, overhead)
+    assert float(spot) == float(on_demand)
+    book = PriceBook({("m5", "z", ON_DEMAND): price,
+                      ("m5", "z", SPOT): price}, {("z", SPOT): 0.0})
+    mat = book.price_matrix(["m5"])
+    costs = expected_cost_usd(t, mat[0], 8, book.rates(), overhead)
+    assert costs[0] == costs[1]
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=st.floats(1.0, 50_000.0), rate=st.floats(0.0, 50.0),
+       overhead=st.floats(0.0, 3600.0))
+def test_expected_completion_never_below_runtime(t, rate, overhead):
+    e = float(expected_completion_time_s(t, rate, overhead))
+    assert np.isfinite(e)
+    assert e >= t * (1 - 1e-12)
+
+
+def test_expected_completion_matches_realized_mean():
+    rng = np.random.default_rng(7)
+    closed = float(expected_completion_time_s(1800.0, 3.0, 120.0))
+    mean = np.mean([realized_completion_time_s(1800.0, 3.0, 120.0, rng)
+                    for _ in range(4000)])
+    assert mean == pytest.approx(closed, rel=0.05)
+
+
+def test_expected_completion_broadcasts():
+    t = np.arange(1.0, 7.0).reshape(2, 3)
+    rates = np.array([0.0, 2.0])
+    e = expected_completion_time_s(t[None], rates[:, None, None], 60.0)
+    assert e.shape == (2, 2, 3)
+    assert np.array_equal(e[0], t)                   # rate 0 row exact
+    assert (e[1] > t).all()
+
+
+# --------------------------------------------------------------------------
+# market-mode grid selection
+# --------------------------------------------------------------------------
+
+def test_flat_book_reproduces_static_selection_exactly():
+    """A single-zone on-demand rate-0 book is the legacy cost model:
+    choices (and every reported number) match field-for-field."""
+    legacy = ConfigurationService(PREDICTORS, PRICES, SCALEOUTS)
+    market = ConfigurationService(PREDICTORS, {}, SCALEOUTS,
+                                  market=PriceBook.flat(PRICES))
+    ctx = np.array([[50.0], [400.0], [2000.0]])
+    deadlines = np.array([600.0, np.nan, 900.0])
+    for a, b in zip(legacy.choose_cluster_batch(ctx, deadlines),
+                    market.choose_cluster_batch(ctx, deadlines)):
+        assert (a.machine_type, a.scale_out, a.predicted_runtime_s,
+                a.runtime_bound_s, a.cost_usd, a.bottleneck) \
+            == (b.machine_type, b.scale_out, b.predicted_runtime_s,
+                b.runtime_bound_s, b.cost_usd, b.bottleneck)
+        assert (b.zone, b.purchase_option) == (DEFAULT_ZONE, ON_DEMAND)
+        assert b.expected_cost_usd == b.cost_usd
+
+
+def test_long_jobs_flee_flaky_spot_short_jobs_keep_it():
+    svc = ConfigurationService(PREDICTORS, {}, SCALEOUTS,
+                               market=two_zone_book())
+    short, = svc.choose_cluster_batch(np.array([[5.0]]))
+    long, = svc.choose_cluster_batch(np.array([[2000.0]]))
+    assert (short.zone, short.purchase_option) == ("az-c", SPOT)
+    assert long.zone == "az-a"             # flaky deep discount rejected
+    assert short.expected_cost_usd > short.cost_usd > 0.0
+    assert long.expected_cost_usd >= long.cost_usd
+
+
+def test_market_deadline_uses_interruption_adjusted_bound():
+    """A deadline the raw runtime meets but the interruption-adjusted
+    expected completion blows must push selection off flaky spot."""
+    book = two_zone_book()
+    svc = ConfigurationService(PREDICTORS, {}, SCALEOUTS, market=book)
+    ctx = np.array([[400.0]])
+    free, = svc.choose_cluster_batch(ctx)
+    t = free.predicted_runtime_s
+    # az-c spot at rate 10/h roughly triples this runtime in expectation;
+    # a deadline at ~1.3x the runtime is only meetable off az-c
+    tight, = svc.choose_cluster_batch(ctx, np.array([1.3 * t]))
+    assert tight.zone != "az-c"
+    assert tight.runtime_bound_s <= 1.3 * t
+
+
+def test_market_constraints_restrict_selection():
+    svc = ConfigurationService(PREDICTORS, {}, SCALEOUTS,
+                               market=two_zone_book())
+    ctx = np.array([[5.0]])
+    od, = svc.choose_cluster_batch(ctx, options=(ON_DEMAND,))
+    assert od.purchase_option == ON_DEMAND
+    az_a, = svc.choose_cluster_batch(ctx, zones=("az-a",))
+    assert az_a.zone == "az-a"
+    with pytest.raises(MarketError, match="unknown zone"):
+        svc.choose_cluster_batch(ctx, zones=("mars",))
+    with pytest.raises(MarketError, match="empty placement constraint"):
+        svc.choose_cluster_batch(ctx, zones=())
+
+
+def test_constraints_without_market_are_typed_errors():
+    svc = ConfigurationService(PREDICTORS, PRICES, SCALEOUTS)
+    with pytest.raises(MarketError, match="market-enabled"):
+        svc.choose_cluster_batch(np.array([[5.0]]), zones=("az-a",))
+
+
+def test_service_construction_validates_prices():
+    with pytest.raises(MarketError, match="no \\$/node-hour price"):
+        ConfigurationService(PREDICTORS, {"m5": 0.2}, SCALEOUTS)
+    with pytest.raises(MarketError, match="positive finite"):
+        ConfigurationService(PREDICTORS, {"m5": 0.2, "c5": 0.0},
+                             SCALEOUTS)
+    with pytest.raises(MarketError, match="has no price in the market"):
+        ConfigurationService(
+            PREDICTORS, {}, SCALEOUTS,
+            market=PriceBook({("m5", "z", ON_DEMAND): 0.2}))
+
+
+def test_configurator_construction_validates_prices():
+    from repro.core.configurator import Configurator
+    with pytest.raises(MarketError, match="no \\$/node-hour price"):
+        Configurator(PREDICTORS["m5"], "m5", {"c5": 0.17}, SCALEOUTS)
+    with pytest.raises(MarketError, match="positive finite"):
+        Configurator(PREDICTORS["m5"], "m5", {"m5": -0.2}, SCALEOUTS)
+
+
+def test_choose_machine_type_validates_prices():
+    from repro.core.configurator import choose_machine_type
+    with pytest.raises(MarketError, match="no \\$/node-hour price"):
+        choose_machine_type(PREDICTORS, {"m5": 0.2}, SCALEOUTS,
+                            np.array([5.0]))
+
+
+# --------------------------------------------------------------------------
+# gateway surface (sync + async, satellite 2)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def market_gateway():
+    return emulated_gateway(W.generate_price_book(0))
+
+
+def test_gateway_market_choice_carries_placement(market_gateway):
+    resp = market_gateway.choose(ChooseRequest("grep", (15.0, 0.02)))
+    assert resp.ok, resp.detail
+    c = resp.result
+    assert c.zone in W.SPOT_ZONES
+    assert c.purchase_option in (ON_DEMAND, SPOT)
+    assert c.expected_cost_usd >= c.cost_usd > 0.0
+
+
+def test_gateway_honors_placement_constraints(market_gateway):
+    resp = market_gateway.choose(ChooseRequest(
+        "grep", (15.0, 0.02), zones=("az-1a",),
+        purchase_options=(ON_DEMAND,)))
+    assert resp.ok, resp.detail
+    assert (resp.result.zone, resp.result.purchase_option) \
+        == ("az-1a", ON_DEMAND)
+
+
+def test_gateway_unknown_placement_is_bad_request(market_gateway):
+    resp = market_gateway.choose(ChooseRequest(
+        "grep", (15.0, 0.02), zones=("mars",)))
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert "mars" in resp.detail and "az-1a" in resp.detail
+    resp = market_gateway.choose(ChooseRequest(
+        "grep", (15.0, 0.02), purchase_options=("reserved",)))
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert "reserved" in resp.detail
+    resp = market_gateway.choose(ChooseRequest(
+        "grep", (15.0, 0.02), zones=()))
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert "empty placement constraint" in resp.detail
+
+
+def test_constraints_on_marketless_gateway_are_bad_request():
+    gw = emulated_gateway(None)
+    resp = gw.choose(ChooseRequest("grep", (15.0, 0.02),
+                                   zones=("az-1a",)))
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert "market-enabled" in resp.detail
+    # and the plain path still answers without any market stamping
+    resp = gw.choose(ChooseRequest("grep", (15.0, 0.02)))
+    assert resp.ok
+    assert (resp.result.zone, resp.result.purchase_option,
+            resp.result.expected_cost_usd) == ("", "", 0.0)
+
+
+def test_gateway_missing_price_is_bad_request_envelope():
+    """Satellite 1 end to end: a store machine vocabulary wider than the
+    price dict answers a typed bad_request naming the machine — not a
+    bare KeyError mid-score, not an internal error."""
+    data = W.generate_job_data("grep", 0)
+    hub = Hub()
+    hub.publish(JobRepo("grep", "grep", data.schema,
+                        RuntimeDataStore(data, seed=0),
+                        predictor_kw={"max_cv_folds": 10}))
+    gw = HubGateway(hub, {"m5.xlarge": 0.192}, (2, 3, 4))
+    resp = gw.choose(ChooseRequest("grep", (15.0, 0.02)))
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert "no $/node-hour price" in resp.detail
+    # zero/negative prices are equally refused (they would silently win
+    # every cheapest-cost selection)
+    prices = {m.name: m.price for m in W.MACHINES.values()}
+    gw = HubGateway(hub, dict(prices, **{"c5.xlarge": 0.0}), (2, 3, 4))
+    resp = gw.choose(ChooseRequest("grep", (15.0, 0.02)))
+    assert not resp.ok and resp.error_code == "bad_request"
+    assert "positive finite" in resp.detail
+
+
+def test_async_market_paths_match_sync_and_leak_no_lanes(market_gateway):
+    async def run():
+        async with AsyncHubGateway(market_gateway) as agw:
+            ok = await agw.choose(ChooseRequest(
+                "grep", (15.0, 0.02), zones=("az-1a", "az-1b")))
+            bad_zone = await agw.choose(ChooseRequest(
+                "grep", (15.0, 0.02), zones=("mars",)))
+            bad_empty = await agw.choose(ChooseRequest(
+                "grep", (15.0, 0.02), purchase_options=()))
+            unconstrained = await agw.choose(ChooseRequest(
+                "grep", (15.0, 0.02)))
+            return ok, bad_zone, bad_empty, unconstrained, \
+                dict(agw._lanes)
+
+    ok, bad_zone, bad_empty, unconstrained, lanes = asyncio.run(run())
+    assert ok.ok and ok.result.zone in ("az-1a", "az-1b")
+    assert not bad_zone.ok and bad_zone.error_code == "bad_request"
+    assert "mars" in bad_zone.detail
+    assert not bad_empty.ok and bad_empty.error_code == "bad_request"
+    # constrained requests dispatch inline; only the unconstrained one
+    # may have opened a lane — bad constraints never leak one
+    assert len(lanes) == 1 and all("grep" in k for k in lanes)
+    # the async envelopes match the sync path byte-for-byte
+    sync_ok = market_gateway.choose(ChooseRequest(
+        "grep", (15.0, 0.02), zones=("az-1a", "az-1b")))
+    assert ok == sync_ok
+    sync_un = market_gateway.choose(ChooseRequest("grep", (15.0, 0.02)))
+    assert unconstrained == sync_un
+
+
+# --------------------------------------------------------------------------
+# emulated market + spot replay determinism
+# --------------------------------------------------------------------------
+
+def test_generated_price_book_is_deterministic_and_ordered():
+    b1 = W.generate_price_book(0, n_ticks=16)
+    b2 = W.generate_price_book(0, n_ticks=16)
+    assert b1.placements == b2.placements
+    for m in b1.machines:
+        for p in b1.placements:
+            for tick in range(16):
+                assert b1.price_of(m, p.zone, p.option, tick) \
+                    == b2.price_of(m, p.zone, p.option, tick)
+    assert b1.rates().tolist() == b2.rates().tolist()
+    # spot discounts below on-demand, rate ordering tracks the discount
+    for m in b1.machines:
+        for z in W.SPOT_ZONES:
+            od = b1.price_of(m, z, ON_DEMAND)
+            for tick in range(16):
+                assert b1.price_of(m, z, SPOT, tick) < od
+    assert b1.rate_of("az-1a", SPOT) < b1.rate_of("az-1b", SPOT) \
+        < b1.rate_of("az-1c", SPOT)
+    assert all(b1.rate_of(z, ON_DEMAND) == 0.0 for z in W.SPOT_ZONES)
+
+
+def test_naive_view_zeroes_rates_and_keeps_prices():
+    book = W.generate_price_book(0, n_ticks=8)
+    book.seek(3)
+    naive = book.naive_view()
+    assert naive.tick == 3
+    assert (naive.rates() == 0.0).all()
+    assert np.array_equal(naive.price_matrix(book.machines),
+                          book.price_matrix(book.machines))
+
+
+@pytest.mark.slow
+def test_spot_market_replay_is_deterministic_and_wins():
+    from repro.eval.replay import SpotMarketConfig, run_spot_market
+    cfg = SpotMarketConfig(jobs=("grep", "pagerank"), n_queries=6)
+    r1 = run_spot_market(cfg)
+    r2 = run_spot_market(cfg)
+    assert r1.tsv == r2.tsv
+    assert r1.fingerprint == r2.fingerprint
+    assert r1.ok, r1.summary
+    for s in r1.summary.values():
+        assert s["adjusted_cost"] < s["naive_cost"]
